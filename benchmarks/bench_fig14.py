@@ -1,0 +1,97 @@
+"""Paper Fig. 14a/14b: relative throughput vs optimum for arrays and lists.
+
+Reproduces the paper's §V-A loopback (Fig. 13): SW SER -> HW DES (sw2hw) ->
+HW SER (hw2hw) -> HW DES (hw2hw) -> HW SER (hw2sw) -> SW DES, with 128-bit
+phits and 500-phit frames.  The cycle-accurate FSM engines report per-module
+cycles; steady-state pipeline throughput is 1 / max(stage cycles).
+
+Optimal throughput (paper): array of n elements = 1/(n+1) msg/cycle
+(n data tokens + 1 array-length); list = 1/(n+2) (+ list-begin/end).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import (
+    ClientSchema, DesFSM, Schema, SerFSM, build_rom, des_hw_to_sw,
+    msg_to_des_tokens, ser_sw_to_hw, strip_for_ser,
+)
+from .common import Table
+
+PHIT = 16  # 128-bit
+FRAME_PHITS = 500
+LENGTHS = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192]
+
+
+def _loopback_cycles(schema: Schema, client: ClientSchema, msg: dict) -> Dict[str, int]:
+    rom = build_rom(schema, client)  # DES modules use the client schema
+    rom_plain = build_rom(schema)
+    wire = ser_sw_to_hw(schema, msg)
+    # stage 1: SW->HW DES
+    des1 = DesFSM(rom, "sw2hw", phit_bytes=PHIT).run(wire)
+    # stage 2: HW->HW SER
+    ser2 = SerFSM(rom_plain, "hw2hw", phit_bytes=PHIT, frame_phits=FRAME_PHITS).run(
+        strip_for_ser(des1.tokens)
+    )
+    # stage 3: HW->HW DES
+    des3 = DesFSM(rom, "hw2hw", phit_bytes=PHIT).run(ser2.wire)
+    # stage 4: HW->SW SER
+    ser4 = SerFSM(rom_plain, "hw2sw", phit_bytes=PHIT).run(strip_for_ser(des3.tokens))
+    assert des_hw_to_sw(schema, ser4.wire) == msg  # correctness of the loop
+    return {
+        "sw2hw_des": des1.cycles,
+        "hw2hw_ser": ser2.cycles,
+        "hw2hw_des": des3.cycles,
+        "hw2sw_ser": ser4.cycles,
+    }
+
+
+def bench_array() -> Table:
+    schema = Schema.from_json({"Msg": [["a", ["Array", ["Bytes", 16]]]]})
+    client = ClientSchema.from_json({"a.elem": 1})  # no array-end tag -> not emitted
+    t = Table("fig14a_array_128bit", [
+        "n", "optimal_msgs_per_cycle", "measured", "ratio",
+        "des_cycles", "ser_hh", "des_hh", "ser_hs",
+    ])
+    for n in LENGTHS:
+        msg = {"a": list(range(n))}
+        cyc = _loopback_cycles(schema, client, msg)
+        bottleneck = max(cyc.values())
+        optimal = 1.0 / (n + 1)
+        measured = 1.0 / bottleneck
+        t.add(n, optimal, measured, measured / optimal,
+              cyc["sw2hw_des"], cyc["hw2hw_ser"], cyc["hw2hw_des"], cyc["hw2sw_ser"])
+    return t
+
+
+def bench_list() -> Table:
+    schema = Schema.from_json({"Msg": [["a", ["List", ["Bytes", 16]]]]})
+    client = ClientSchema()
+    t = Table("fig14b_list_128bit", [
+        "n", "optimal_msgs_per_cycle", "measured", "ratio",
+        "des_cycles", "ser_hh", "des_hh", "ser_hs", "frames",
+    ])
+    for n in LENGTHS:
+        msg = {"a": list(range(n))}
+        rom = build_rom(schema, client)
+        wire = ser_sw_to_hw(schema, msg)
+        des1 = DesFSM(rom, "sw2hw", phit_bytes=PHIT).run(wire)
+        ser2 = SerFSM(rom, "hw2hw", phit_bytes=PHIT, frame_phits=FRAME_PHITS).run(
+            strip_for_ser(des1.tokens))
+        des3 = DesFSM(rom, "hw2hw", phit_bytes=PHIT).run(ser2.wire)
+        ser4 = SerFSM(rom, "hw2sw", phit_bytes=PHIT).run(strip_for_ser(des3.tokens))
+        assert des_hw_to_sw(schema, ser4.wire) == msg
+        cyc = [des1.cycles, ser2.cycles, des3.cycles, ser4.cycles]
+        optimal = 1.0 / (n + 2)
+        measured = 1.0 / max(cyc)
+        t.add(n, optimal, measured, measured / optimal, *cyc, ser2.frames)
+    return t
+
+
+def run() -> List[Table]:
+    return [bench_array(), bench_list()]
+
+
+if __name__ == "__main__":
+    for tb in run():
+        print(tb.show())

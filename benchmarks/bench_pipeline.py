@@ -1,0 +1,80 @@
+"""Framework benches: input-pipeline throughput + framed-channel overhead.
+
+* pipeline: host pack+SER -> device DES (Pallas kernel vs jnp oracle) in
+  tokens/sec — the SW->HW direction at bulk rate.
+* channel: HW->HW framing overhead vs frame size (paper: negligible once
+  frames are large; an empty frame per list is the floor).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vectorized import decode_message, wire_to_u8
+from repro.data.pipeline import batch_plan, decode_batch, pack_documents, serialize_batch
+from repro.data import SyntheticCorpus
+from repro.kernels.ops import decode_message_kernel, wire_to_u32
+from repro.runtime import frame_stream, unframe_stream
+from .common import Table, time_call
+
+
+def bench_pipeline() -> Table:
+    t = Table("input_pipeline_throughput", [
+        "batch", "seq", "stage", "ms", "mtok_per_s",
+    ])
+    for B, S in [(8, 512), (16, 1024)]:
+        corpus = SyntheticCorpus(50_000, seed=0)
+        docs = corpus.docs()
+        ntok = B * S
+
+        dt = time_call(lambda: serialize_batch(*pack_documents(docs, B, S)), repeats=3)
+        t.add(B, S, "host_pack_ser", 1e3 * dt, ntok / dt / 1e6)
+
+        tokens, segids = pack_documents(docs, B, S)
+        wire = serialize_batch(tokens, segids)
+        plan = batch_plan(B, S)
+        w32 = wire_to_u32(wire)
+        w8 = wire_to_u8(wire)
+        paths = ["rows.elem.tokens.elem", "rows.elem.segids.elem"]
+
+        k = jax.jit(lambda w: decode_message_kernel(w, plan, paths=paths))
+        dt = time_call(lambda: jax.block_until_ready(k(w32)), repeats=3)
+        t.add(B, S, "device_des_pallas", 1e3 * dt, ntok / dt / 1e6)
+
+        o = jax.jit(lambda w: decode_message(w, plan, paths=paths))
+        dt = time_call(lambda: jax.block_until_ready(o(w8)), repeats=3)
+        t.add(B, S, "device_des_jnp_oracle", 1e3 * dt, ntok / dt / 1e6)
+    return t
+
+
+def bench_channel() -> Table:
+    t = Table("framed_channel_overhead", [
+        "payload_bytes", "frame_phits", "frames", "wire_bytes", "overhead_frac",
+    ])
+    for payload_bytes in (1 << 12, 1 << 16, 1 << 20):
+        words = payload_bytes // 4
+        payload = jnp.arange(words, dtype=jnp.uint32)
+        for frame_phits in (4, 64, 500):
+            frames, nf = frame_stream(payload, jnp.asarray(payload_bytes),
+                                      frame_phits=frame_phits)
+            nf = int(nf)
+            hdr_bytes = nf * 16
+            wire = payload_bytes + hdr_bytes
+            out, nb, ok = unframe_stream(frames)
+            assert bool(ok) and int(nb) == payload_bytes
+            t.add(payload_bytes, frame_phits, nf, wire,
+                  hdr_bytes / payload_bytes)
+    return t
+
+
+def run() -> List[Table]:
+    return [bench_pipeline(), bench_channel()]
+
+
+if __name__ == "__main__":
+    for tb in run():
+        print(tb.show())

@@ -1,0 +1,102 @@
+"""Paper §V area/frequency analog: cost vs schema complexity.
+
+On an FPGA the claim is "critical path delay and area are almost insensitive
+to the message schema" because the traversal FSM is schema-independent and
+only the ROM grows.  The TPU analogues measured here, as schema complexity
+grows (fields x nesting depth):
+
+  * schema-ROM entries        (the only thing that *should* grow, linearly),
+  * context-stack depth       (grows with nesting only),
+  * decode jaxpr op count     (generated decoder: should stay ~constant per
+                               leaf — the "FSM area" analog),
+  * decode wall time per byte (the "frequency" analog, CPU interpret mode),
+
+versus the *naive* per-field unrolled decoder (the paper's FSM-per-field
+anti-pattern), whose op count grows with total field count.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core import Schema, build_rom, build_plan, random_message, ser_sw_to_hw
+from repro.core.vectorized import decode_message, wire_to_u8
+from repro.kernels.ops import decode_message_kernel, wire_to_u32
+from .common import Table, time_call
+
+
+def make_schema(n_fields: int, depth: int) -> Schema:
+    """n_fields scalar fields wrapped in `depth` levels of Array/List."""
+    inner = [[f"f{i}", ["Bytes", 4]] for i in range(n_fields)]
+    obj = {"Inner": inner}
+    t = ["Struct", "Inner"]
+    for d in range(depth):
+        t = ["Array", t] if d % 2 == 0 else ["List", t]
+    obj = {"Msg": [["a", t], ["tail", ["Bytes", 4]]], "Inner": inner}
+    return Schema.from_json(obj)
+
+
+def naive_unrolled_decoder(schema: Schema, msg: dict):
+    """The anti-pattern: one python-generated op per field instance."""
+    plan = build_plan(schema, msg)
+
+    def decode(wire_u8):
+        out = []
+        for p, offs in plan.offsets.items():
+            nb = plan.nbytes[p]
+            for i in range(plan.counts[p]):  # unrolled per INSTANCE
+                o = int(offs[i])
+                b = wire_u8[o : o + nb].astype(np.uint32)
+                shifts = np.asarray([1, 256, 65536, 16777216][: nb], np.uint32)
+                out.append((b * shifts).sum())
+        return out
+
+    return decode, plan
+
+
+def run() -> List[Table]:
+    t = Table("schema_complexity_area_freq_analog", [
+        "fields", "depth", "rom_entries", "stack_depth",
+        "hgum_jaxpr_ops", "naive_jaxpr_ops",
+        "hgum_ns_per_byte", "wire_bytes",
+    ])
+    rng = np.random.default_rng(0)
+    for n_fields, depth in [(2, 1), (4, 1), (8, 1), (16, 1),
+                            (4, 2), (4, 3), (8, 3), (16, 3), (16, 4)]:
+        schema = make_schema(n_fields, depth)
+        rom = build_rom(schema)
+        # representative message: containers get 3 elements each
+        def gen(max_elems=6):
+            # threshold must be reachable: the smallest config (2 fields,
+            # depth 1) tops out at 4 + 6*8 + 4 = 56 bytes
+            for _ in range(10_000):
+                m = random_message(schema, rng, max_elems=max_elems, depth_decay=1.0)
+                if len(ser_sw_to_hw(schema, m)) > 40:
+                    return m
+            return m
+        msg = gen()
+        wire = ser_sw_to_hw(schema, msg)
+        plan = build_plan(schema, msg)
+        w8 = wire_to_u8(wire)
+
+        # generated decoder op count (jaxpr size — the "area" analog)
+        jaxpr = jax.make_jaxpr(lambda w: decode_message(w, plan))(w8)
+        hgum_ops = sum(1 for _ in jaxpr.jaxpr.eqns)
+        # naive unrolled decoder op count (python-op proxy: field instances)
+        naive_ops = sum(plan.counts.values())
+
+        dt = time_call(
+            lambda: jax.block_until_ready(decode_message(w8, plan)), repeats=3
+        )
+        t.add(n_fields, depth, rom.n_nodes, rom.stack_depth,
+              hgum_ops, naive_ops, 1e9 * dt / len(wire), len(wire))
+    return [t]
+
+
+if __name__ == "__main__":
+    for tb in run():
+        print(tb.show())

@@ -1,0 +1,56 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import csv
+import io
+import time
+from typing import Callable, Dict, List
+
+
+def time_call(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+class Table:
+    def __init__(self, name: str, columns: List[str]):
+        self.name = name
+        self.columns = columns
+        self.rows: List[List] = []
+
+    def add(self, *row):
+        assert len(row) == len(self.columns)
+        self.rows.append(list(row))
+
+    def csv(self) -> str:
+        buf = io.StringIO()
+        w = csv.writer(buf)
+        w.writerow([f"# {self.name}"])
+        w.writerow(self.columns)
+        w.writerows(self.rows)
+        return buf.getvalue()
+
+    def show(self) -> str:
+        widths = [
+            max(len(str(c)), *(len(_fmt(r[i])) for r in self.rows)) if self.rows else len(str(c))
+            for i, c in enumerate(self.columns)
+        ]
+        out = [f"== {self.name} =="]
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(self.columns, widths)))
+        for r in self.rows:
+            out.append("  ".join(_fmt(v).ljust(w) for v, w in zip(r, widths)))
+        return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,41 @@
+"""Benchmark aggregator: one table per paper figure + framework benches.
+
+``python -m benchmarks.run`` prints every table and writes
+``experiments/benchmarks.csv``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    from . import bench_fig14, bench_fe_case_study, bench_schema_complexity
+    from . import bench_pipeline
+
+    mods = [
+        ("fig14 (throughput vs optimum)", bench_fig14),
+        ("schema complexity (area/freq analog)", bench_schema_complexity),
+        ("FE case study", bench_fe_case_study),
+        ("framework pipeline + channel", bench_pipeline),
+    ]
+    tables = []
+    for name, mod in mods:
+        t0 = time.time()
+        got = mod.run()
+        tables.extend(got)
+        print(f"[{name}] {time.time()-t0:.1f}s", file=sys.stderr)
+        for tb in got:
+            print(tb.show())
+            print()
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/benchmarks.csv", "w") as f:
+        for tb in tables:
+            f.write(tb.csv())
+            f.write("\n")
+    print(f"wrote experiments/benchmarks.csv ({len(tables)} tables)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Batched serving over HGum wires (the paper's three directions, live).
+
+Requests arrive as SW->HW HGum wires (List of prompts, unknown lengths);
+the serving host deserializes with the streaming FSM, batches prompts,
+runs prefill + greedy decode, and answers with an HW->SW wire (counts after
+elements; host parses from the end).
+
+Run:  PYTHONPATH=src python examples/serve_requests.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.launch.serve import (
+    decode_response, encode_request, serve_request,
+)
+from repro.models import init_params
+
+
+def main():
+    cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    for req_id in range(3):
+        n_prompts = int(rng.integers(2, 6))
+        prompts = [
+            list(map(int, rng.integers(2, cfg.vocab, rng.integers(3, 20))))
+            for _ in range(n_prompts)
+        ]
+        wire = encode_request(req_id, prompts)
+        t0 = time.time()
+        resp = serve_request(params, cfg, wire, max_new=8, pad_to=32)
+        dt = time.time() - t0
+        rid, outs = decode_response(resp)
+        print(f"req {rid}: {n_prompts} prompts ({len(wire)} B) -> "
+              f"{sum(len(o) for o in outs)} tokens ({len(resp)} B) in {dt:.2f}s")
+        for i, o in enumerate(outs):
+            print(f"   prompt[{i}] len={len(prompts[i]):2d} -> {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Splice the generated roofline table into EXPERIMENTS.md and append the
+hillclimb + multi-pod summaries from the tagged dryrun JSONs."""
+import glob
+import io
+import json
+import os
+import subprocess
+import sys
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def table(mesh="single", tag=""):
+    out = subprocess.run(
+        [sys.executable, "scripts/roofline_table.py", "--mesh", mesh, "--tag", tag],
+        capture_output=True, text=True,
+    )
+    return out.stdout
+
+
+def hillclimb_rows():
+    rows = []
+    for fn in sorted(glob.glob("experiments/dryrun/*_single_*.json")):
+        r = json.load(open(fn))
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], r["tag"], "FAILED", "", "", "", ""))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], r["tag"],
+            f"{rf['t_compute']*1e3:.1f}", f"{rf['t_memory']*1e3:.1f}",
+            f"{rf['t_collective']*1e3:.1f}",
+            f"{r['memory']['per_device_bytes']/2**30:.2f}",
+            f"{rf['useful_ratio']:.2f}",
+        ))
+    return rows
+
+
+def multi_rows():
+    rows = []
+    for fn in sorted(glob.glob("experiments/dryrun/*_multi.json")):
+        r = json.load(open(fn))
+        if r["status"] == "skipped":
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED | | {r.get('error','')[:60]} |")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{r['memory']['per_device_bytes']/2**30:.2f} GiB | "
+            f"t=({rf['t_compute']*1e3:.1f}, {rf['t_memory']*1e3:.1f}, "
+            f"{rf['t_collective']*1e3:.1f}) ms dom={rf['dominant'][2:]} |"
+        )
+    return rows
+
+
+def main():
+    md = open("EXPERIMENTS.md").read()
+    tbl = table("single")
+    block = f"{MARK}\n\n{tbl}\n"
+    if MARK in md:
+        pre, _, post = md.partition(MARK)
+        # drop any previously spliced table up to the next section header
+        idx = post.find("\nTerms:")
+        post = post[idx:] if idx >= 0 else post
+        md = pre + block + post
+    open("EXPERIMENTS.md", "w").write(md)
+
+    # hillclimb + multi summaries to stdout (pasted manually into §Perf)
+    print("== hillclimb variants ==")
+    print("| arch | shape | tag | t_c ms | t_m ms | t_x ms | GiB | 6ND/HLO |")
+    for r in hillclimb_rows():
+        print("| " + " | ".join(str(x) for x in r) + " |")
+    print("\n== multi-pod cells ==")
+    for r in multi_rows():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dryrun JSONs.
+
+Usage: python scripts/roofline_table.py [--mesh single] [--md]
+"""
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "gemma2-27b", "granite-34b", "yi-6b", "stablelm-3b", "whisper-tiny",
+    "jamba-1.5-large-398b", "mixtral-8x22b", "phi3.5-moe-42b-a6.6b",
+    "phi-3-vision-4.2b", "xlstm-125m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d="experiments/dryrun"):
+    out = {}
+    for fn in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(fn))
+        out[(r["arch"], r["shape"], r["mesh"], r.get("tag", ""))] = r
+    return out
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return None
+    if r["status"] != "ok":
+        return f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | {r.get('error','')[:60]} |"
+    rf = r["roofline"]
+    m = r["memory"]
+    t_c, t_m, t_x = rf["t_compute"], rf["t_memory"], rf["t_collective"]
+    dom = rf["dominant"][2:]
+    note = {
+        "compute": "raise arithmetic intensity / cut redundant compute",
+        "memory": "fuse attention (Pallas flash) / cut remat re-reads",
+        "collective": "overlap or shrink collectives (EP/TP layout)",
+    }[dom]
+    return (
+        f"| {r['arch']} | {r['shape']} | {t_c*1e3:9.2f} | {t_m*1e3:9.2f} | "
+        f"{t_x*1e3:9.2f} | **{dom}** | {m['per_device_bytes']/2**30:5.2f} | "
+        f"{'Y' if m['fits'] else 'N'} | {rf['useful_ratio']:.2f} | {note} |"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = load()
+    print("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | dominant "
+          "| GiB/dev | fits | 6ND/HLO | to move the bottleneck |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    n_ok = n_skip = n_fail = 0
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s, args.mesh, args.tag))
+            if r is None:
+                print(f"| {a} | {s} | (pending) | | | | | | | |")
+                continue
+            if r["status"] == "skipped":
+                n_skip += 1
+                print(f"| {a} | {s} | — | — | — | skipped | — | — | — | {r['reason'][:50]} |")
+                continue
+            line = fmt_row(r)
+            if r["status"] == "ok":
+                n_ok += 1
+            else:
+                n_fail += 1
+            print(line)
+    print(f"\nok={n_ok} skipped={n_skip} failed={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

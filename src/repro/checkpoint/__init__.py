@@ -1,0 +1,11 @@
+"""HGum-framed fault-tolerant checkpointing."""
+from .store import (
+    CheckpointManager,
+    load_checkpoint,
+    restore_into,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager", "load_checkpoint", "restore_into", "save_checkpoint",
+]

@@ -1,0 +1,69 @@
+"""repro.core — HGum: schema-driven streaming SER/DES (the paper's contribution).
+
+Public API:
+
+* IDL: :class:`Schema`, :class:`ClientSchema`, type constructors.
+* Compilation: :func:`build_rom` (schema tree -> schema ROM).
+* Software (store-and-forward) functions: ``ser_sw_to_hw`` / ``des_hw_to_sw`` etc.
+* Hardware (streaming, cycle-accurate) engines: :class:`DesFSM` / :class:`SerFSM`.
+* TPU-native engines: :mod:`repro.core.vectorized` + ``repro.kernels``.
+"""
+from .idl import (
+    Array,
+    Bytes,
+    ClientSchema,
+    ListT,
+    Schema,
+    SchemaError,
+    StructRef,
+    all_token_paths,
+)
+from .schema_tree import (
+    COUNT_BYTES,
+    KIND_ARRAY,
+    KIND_BYTES,
+    KIND_END,
+    KIND_LIST,
+    SchemaROM,
+    build_rom,
+    build_tree,
+    tree_depth,
+)
+from .tokens import (
+    TOK_ARRAY_END,
+    TOK_ARRAY_LENGTH,
+    TOK_DATA,
+    TOK_LIST_BEGIN,
+    TOK_LIST_END,
+    Token,
+    strip_for_ser,
+)
+from .sw_serdes import (
+    des_hw_to_sw,
+    des_sw_oracle,
+    msg_to_des_tokens,
+    random_message,
+    ser_hw_to_sw_reference,
+    ser_sw_to_hw,
+    tokens_to_msg,
+)
+from .fsm import DesFSM, EngineResult, SerFSM
+from .framing import (
+    DEFAULT_FRAME_PHITS,
+    DEFAULT_PHIT_BYTES,
+    FrameHeader,
+    FrameWriter,
+)
+from .vectorized import (
+    DecodePlan,
+    build_plan,
+    decode_leaf,
+    decode_message,
+    encode_leaf,
+    encode_message,
+    lanes_to_int,
+    plan_from_wire,
+    wire_to_u8,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

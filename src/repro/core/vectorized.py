@@ -1,0 +1,292 @@
+"""TPU-native HGum decode/encode: prefix-sum + segmented gather.
+
+This is the hardware adaptation of the paper's §IV-A2 traversal (see
+DESIGN.md §3).  An FPGA walks the schema ROM with a 1-token-per-cycle FSM; a
+TPU has no cheap sequential byte automaton, but it has wide gathers and
+prefix scans.  We therefore split deserialization into:
+
+* **structure pass** — compute, for every instance of every schema-ROM node,
+  its byte offset in the wire.  The side that *can* buffer (the host for
+  SW->HW, exactly the asymmetry the paper exploits in §IV-B) computes this
+  `DecodePlan` in O(#field instances) with numpy; for device-resident wires
+  the plan is recovered from the counts in the wire itself
+  (``plan_from_wire``).
+* **payload pass** — one vectorized gather per leaf node moves all payload
+  bytes at once (``decode_leaf`` below; the Pallas kernel in
+  ``repro.kernels.phit_unpack`` is the tiled production version, this module
+  is its jnp oracle).
+
+Outputs are padded to static capacities (`caps`) with validity masks, as jit
+requires static shapes.  Encoding (`encode_from_plan`) is the mirrored
+scatter.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .idl import Array, Bytes, ListT, Schema, StructRef, TypeNode, ELEM
+from .schema_tree import COUNT_BYTES
+
+_CONTAINER = (Array, ListT)
+
+
+# ---------------------------------------------------------------------------
+# Decode plan (structure pass)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DecodePlan:
+    """Byte offsets of every instance of every field path, padded to caps."""
+
+    offsets: Dict[str, np.ndarray]  # path -> int32[cap] byte offsets (pad = 0)
+    counts: Dict[str, int]  # path -> true instance count
+    nbytes: Dict[str, int]  # path -> field width (COUNT_BYTES for containers)
+    is_container: Dict[str, bool]
+    wire_len: int
+
+    def cap(self, path: str) -> int:
+        return int(self.offsets[path].shape[0])
+
+
+def _walk_paths(schema: Schema) -> List[Tuple[str, TypeNode]]:
+    """All (path, type) pairs of the flattened schema in traversal order."""
+    out: List[Tuple[str, TypeNode]] = []
+
+    def walk(t: TypeNode, path: str) -> None:
+        if isinstance(t, Bytes):
+            out.append((path, t))
+        elif isinstance(t, StructRef):
+            for f, ft in schema.structs[t.name]:
+                walk(ft, f"{path}.{f}" if path else f)
+        elif isinstance(t, _CONTAINER):
+            out.append((path, t))
+            walk(t.elem, f"{path}.{ELEM}")
+        else:  # pragma: no cover
+            raise TypeError(f"bad type {t!r}")
+
+    for f, ft in schema.structs[schema.top]:
+        walk(ft, f)
+    return out
+
+
+def build_plan(
+    schema: Schema, msg: dict, caps: Optional[Dict[str, int]] = None
+) -> DecodePlan:
+    """Host-side structure pass over a message (SW->HW wire format)."""
+    offs: Dict[str, List[int]] = {p: [] for p, _ in _walk_paths(schema)}
+    widths: Dict[str, int] = {}
+    is_cont: Dict[str, bool] = {}
+    for p, t in _walk_paths(schema):
+        widths[p] = t.n if isinstance(t, Bytes) else COUNT_BYTES
+        is_cont[p] = isinstance(t, _CONTAINER)
+    pos = 0
+
+    def walk(t: TypeNode, v, path: str) -> None:
+        nonlocal pos
+        if isinstance(t, Bytes):
+            offs[path].append(pos)
+            pos += t.n
+        elif isinstance(t, StructRef):
+            for f, ft in schema.structs[t.name]:
+                walk(ft, v[f], f"{path}.{f}" if path else f)
+        elif isinstance(t, _CONTAINER):
+            offs[path].append(pos)
+            pos += COUNT_BYTES
+            for e in v:
+                walk(t.elem, e, f"{path}.{ELEM}")
+        else:  # pragma: no cover
+            raise TypeError(f"bad type {t!r}")
+
+    for f, ft in schema.structs[schema.top]:
+        walk(ft, msg[f], f)
+
+    out_offs, out_counts = {}, {}
+    for p, lst in offs.items():
+        cap = (caps or {}).get(p, max(1, len(lst)))
+        if len(lst) > cap:
+            raise ValueError(f"{p}: {len(lst)} instances exceed cap {cap}")
+        arr = np.zeros(cap, np.int32)
+        arr[: len(lst)] = lst
+        out_offs[p] = arr
+        out_counts[p] = len(lst)
+    return DecodePlan(out_offs, out_counts, widths, is_cont, wire_len=pos)
+
+
+def plan_from_wire(
+    schema: Schema,
+    wire: bytes,
+    caps: Optional[Dict[str, int]] = None,
+    record_paths: Optional[List[str]] = None,
+) -> DecodePlan:
+    """Structure pass over a received wire (no values needed, counts only).
+
+    Cost is O(#container instances + #recorded instances): when
+    `record_paths` restricts recording, fixed-size unrecorded subtrees are
+    skipped by multiplication instead of being walked element by element.
+    """
+    paths = _walk_paths(schema)
+    wanted = set(record_paths) if record_paths is not None else {p for p, _ in paths}
+    offs: Dict[str, List[int]] = {p: [] for p, _ in paths if p in wanted}
+    widths = {p: (t.n if isinstance(t, Bytes) else COUNT_BYTES) for p, t in paths}
+    is_cont = {p: isinstance(t, _CONTAINER) for p, t in paths}
+
+    def static_size(t: TypeNode) -> Optional[int]:
+        if isinstance(t, Bytes):
+            return t.n
+        if isinstance(t, StructRef):
+            tot = 0
+            for _, ft in schema.structs[t.name]:
+                s = static_size(ft)
+                if s is None:
+                    return None
+                tot += s
+            return tot
+        return None  # containers are dynamic
+
+    pos = 0
+
+    def walk(t: TypeNode, path: str) -> None:
+        nonlocal pos
+        if isinstance(t, Bytes):
+            if path in offs:
+                offs[path].append(pos)
+            pos += t.n
+        elif isinstance(t, StructRef):
+            for f, ft in schema.structs[t.name]:
+                walk(ft, f"{path}.{f}" if path else f)
+        elif isinstance(t, _CONTAINER):
+            if path in offs:
+                offs[path].append(pos)
+            n = int.from_bytes(wire[pos : pos + COUNT_BYTES], "little")
+            pos += COUNT_BYTES
+            es = static_size(t.elem)
+            epath = f"{path}.{ELEM}"
+            recorded_below = any(p.startswith(epath) for p in offs)
+            if es is not None and not recorded_below:
+                pos += n * es  # skip the whole fixed-size run
+            elif es is not None and recorded_below and _only_leaf(t.elem):
+                # uniform run: offsets are an arithmetic sequence (prefix-sum
+                # fast path — this is the TPU-native container decode)
+                offs[epath].extend(range(pos, pos + n * es, es))
+                pos += n * es
+            else:
+                for _ in range(n):
+                    walk(t.elem, epath)
+        else:  # pragma: no cover
+            raise TypeError(f"bad type {t!r}")
+
+    def _only_leaf(t: TypeNode) -> bool:
+        return isinstance(t, Bytes)
+
+    for f, ft in schema.structs[schema.top]:
+        walk(ft, f)
+
+    out_offs, out_counts = {}, {}
+    for p, lst in offs.items():
+        cap = (caps or {}).get(p, max(1, len(lst)))
+        arr = np.zeros(cap, np.int32)
+        arr[: len(lst)] = lst[:cap]
+        out_offs[p] = arr
+        out_counts[p] = len(lst)
+    return DecodePlan(out_offs, out_counts, widths, is_cont, wire_len=pos)
+
+
+# ---------------------------------------------------------------------------
+# Payload pass (vectorized gather) — jnp oracle for kernels/phit_unpack
+# ---------------------------------------------------------------------------
+
+
+def wire_to_u8(wire: bytes) -> jnp.ndarray:
+    return jnp.asarray(np.frombuffer(wire, dtype=np.uint8))
+
+
+def decode_leaf(
+    wire_u8: jnp.ndarray, offsets: jnp.ndarray, nbytes: int
+) -> jnp.ndarray:
+    """Gather all instances of one leaf field: (cap,) offsets ->
+    (cap, ceil(nbytes/4)) uint32 little-endian lanes (jit-friendly)."""
+    nlanes = (nbytes + 3) // 4
+    byte_idx = offsets[:, None] + jnp.arange(nbytes, dtype=jnp.int32)[None, :]
+    byte_idx = jnp.clip(byte_idx, 0, wire_u8.shape[0] - 1)
+    b = wire_u8[byte_idx].astype(jnp.uint32)  # (cap, nbytes)
+    pad = nlanes * 4 - nbytes
+    if pad:
+        b = jnp.pad(b, ((0, 0), (0, pad)))
+    b = b.reshape(offsets.shape[0], nlanes, 4)
+    shifts = jnp.array([0, 8, 16, 24], jnp.uint32)
+    return (b << shifts[None, None, :]).sum(axis=-1).astype(jnp.uint32)
+
+
+def decode_message(
+    wire_u8: jnp.ndarray, plan: DecodePlan, paths: Optional[List[str]] = None
+) -> Dict[str, jnp.ndarray]:
+    """Decode every requested path into padded uint32-lane buffers."""
+    out = {}
+    for p in paths or plan.offsets.keys():
+        out[p] = decode_leaf(wire_u8, jnp.asarray(plan.offsets[p]), plan.nbytes[p])
+    return out
+
+
+def lanes_to_int(lanes: np.ndarray, nbytes: int) -> np.ndarray:
+    """uint32 lanes -> python-int-compatible object array (test helper)."""
+    lanes = np.asarray(lanes, dtype=np.uint64)
+    out = np.zeros(lanes.shape[0], dtype=object)
+    for j in range(lanes.shape[1]):
+        out = out + (lanes[:, j].astype(object) << (32 * j))
+    mask = (1 << (8 * nbytes)) - 1
+    return np.array([int(v) & mask for v in out], dtype=object)
+
+
+# ---------------------------------------------------------------------------
+# Encode (scatter) — device-side SER payload pass
+# ---------------------------------------------------------------------------
+
+
+def encode_leaf(
+    wire_u8: jnp.ndarray,
+    offsets: jnp.ndarray,
+    lanes: jnp.ndarray,
+    nbytes: int,
+    count: jnp.ndarray | int,
+) -> jnp.ndarray:
+    """Scatter `count` instances of a leaf field into the wire buffer."""
+    cap = offsets.shape[0]
+    nlanes = (nbytes + 3) // 4
+    shifts = jnp.array([0, 8, 16, 24], jnp.uint32)
+    bytes_ = (
+        (lanes[:, :, None] >> shifts[None, None, :]) & jnp.uint32(0xFF)
+    ).astype(jnp.uint8)
+    bytes_ = bytes_.reshape(cap, nlanes * 4)[:, :nbytes]
+    byte_idx = offsets[:, None] + jnp.arange(nbytes, dtype=jnp.int32)[None, :]
+    valid = (jnp.arange(cap, dtype=jnp.int32) < count)[:, None]
+    byte_idx = jnp.where(valid, byte_idx, wire_u8.shape[0])  # OOB drops
+    return wire_u8.at[byte_idx.reshape(-1)].set(
+        bytes_.reshape(-1), mode="drop"
+    )
+
+
+def encode_message(
+    wire_len: int, plan: DecodePlan, values: Dict[str, jnp.ndarray]
+) -> jnp.ndarray:
+    """Software-free device-side encode: scatter all paths into a wire buffer.
+
+    `values[path]` are uint32 lanes shaped (cap, nlanes); container paths must
+    be present with their counts as values (they serialize like u32 fields).
+    """
+    wire = jnp.zeros(wire_len, jnp.uint8)
+    for p, lanes in values.items():
+        wire = encode_leaf(
+            wire,
+            jnp.asarray(plan.offsets[p]),
+            lanes,
+            plan.nbytes[p],
+            plan.counts[p],
+        )
+    return wire

@@ -1,0 +1,20 @@
+"""HGum Pallas TPU kernels (DES/SER payload pass).
+
+``phit_unpack`` / ``frame_pack`` are the tiled production kernels with
+explicit BlockSpec VMEM tiling; ``ops`` holds the jitted wrappers;
+``ref`` the pure-jnp oracles the tests assert against.
+"""
+from .ops import (
+    decode_gather,
+    decode_message_kernel,
+    decode_run,
+    encode_run,
+    runs_from_plan,
+    wire_to_u32,
+    write_headers,
+)
+
+__all__ = [
+    "decode_gather", "decode_message_kernel", "decode_run", "encode_run",
+    "runs_from_plan", "wire_to_u32", "write_headers",
+]

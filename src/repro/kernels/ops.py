@@ -1,0 +1,97 @@
+"""Jitted public wrappers around the HGum Pallas kernels.
+
+``decode_runs`` is the production DES payload pass: it takes the wire plus a
+*run table* (the structure pass output — one row per uniform run of a leaf
+field) and returns the unpacked token lanes for each requested leaf.  The
+interpret flag defaults to True because this container executes TPU kernels
+on CPU; on real TPU pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.idl import Schema
+from ..core.vectorized import DecodePlan
+from .frame_pack import pack_run, stamp_headers
+from .phit_unpack import unpack_gather, unpack_run
+
+
+def wire_to_u32(wire: bytes | np.ndarray) -> jnp.ndarray:
+    """bytes -> little-endian uint32 lanes (tail zero-padded)."""
+    buf = np.frombuffer(wire, np.uint8) if isinstance(wire, bytes) else np.asarray(wire, np.uint8)
+    pad = (-len(buf)) % 4
+    if pad:
+        buf = np.concatenate([buf, np.zeros(pad, np.uint8)])
+    return jnp.asarray(buf.view(np.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("base", "stride", "count", "nbytes", "interpret"))
+def decode_run(wire_u32, base: int, stride: int, count: int, nbytes: int,
+               interpret: bool = True):
+    return unpack_run(wire_u32, base, stride, count, nbytes, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("nbytes", "interpret"))
+def decode_gather(wire_u32, offsets, nbytes: int, interpret: bool = True):
+    return unpack_gather(wire_u32, offsets, nbytes, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "nbytes", "interpret"))
+def encode_run(tokens, stride: int, nbytes: int, interpret: bool = True):
+    return pack_run(tokens, stride, nbytes, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def write_headers(wire_u32, headers, interpret: bool = True):
+    return stamp_headers(wire_u32, headers, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Plan-driven decode: choose run-kernel vs gather-kernel per leaf
+# ---------------------------------------------------------------------------
+
+
+def runs_from_plan(plan: DecodePlan, path: str) -> Optional[Tuple[int, int]]:
+    """If `path`'s instances form one uniform run, return (base, stride)."""
+    n = plan.counts[path]
+    if n == 0:
+        return None
+    offs = np.asarray(plan.offsets[path][:n])
+    if n == 1:
+        return int(offs[0]), max(plan.nbytes[path], 4)
+    strides = np.diff(offs)
+    if np.all(strides == strides[0]) and strides[0] > 0:
+        return int(offs[0]), int(strides[0])
+    return None
+
+
+def decode_message_kernel(
+    wire_u32: jnp.ndarray,
+    plan: DecodePlan,
+    paths: Optional[List[str]] = None,
+    interpret: bool = True,
+) -> Dict[str, jnp.ndarray]:
+    """DES payload pass using the Pallas kernels (run fast-path per leaf)."""
+    out = {}
+    for p in paths or plan.offsets.keys():
+        nbytes = plan.nbytes[p]
+        run = runs_from_plan(plan, p)
+        if run is not None:
+            base, stride = run
+            got = decode_run(
+                wire_u32, base, stride, plan.counts[p], nbytes, interpret=interpret
+            )
+            cap = plan.cap(p)
+            if got.shape[0] < cap:
+                got = jnp.pad(got, ((0, cap - got.shape[0]), (0, 0)))
+            out[p] = got
+        else:
+            out[p] = decode_gather(
+                wire_u32, jnp.asarray(plan.offsets[p]), nbytes, interpret=interpret
+            )
+    return out

@@ -1,0 +1,182 @@
+"""Pallas TPU kernel: HGum DES payload pass (phit stream -> token lanes).
+
+The FPGA DES emits one <=16B token per cycle from the phit stream; the TPU
+analogue emits a *tile* of tokens per grid step (DESIGN.md §3).  Two kernels:
+
+* ``unpack_run``     — uniform-width run: instance i sits at byte
+  ``base + i*stride``.  This is the bulk path (the paper's Fig. 14 schema —
+  long Array/List of fixed-size elements — is exactly one run).  The aligned
+  case (base, stride multiples of 4) is a pure VMEM reshape; the general
+  case shift-combines adjacent 32-bit words, vectorized over the 4 possible
+  byte phases.
+* ``unpack_gather``  — arbitrary per-instance byte offsets (ragged
+  containers); one dynamic-sliced vector load per row inside the block.
+
+Wire layout: uint32 little-endian lanes (``ops.wire_to_u32`` pads the tail).
+Outputs are (N, nlanes) uint32 lanes, identical to ``ref.decode_leaf_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256  # instances per grid step
+
+
+def _lane_mask(nbytes: int, nlanes: int) -> jnp.ndarray:
+    """Per-lane masks zeroing bytes beyond `nbytes`.
+
+    Computed from an iota (not a literal array) so it can be materialized
+    inside a Pallas kernel body without becoming a captured constant.
+    """
+    j = jax.lax.broadcasted_iota(jnp.int32, (nlanes,), 0)
+    rem = nbytes - 4 * j
+    partial = (jnp.uint32(1) << (8 * jnp.clip(rem, 0, 3)).astype(jnp.uint32)) - 1
+    return jnp.where(
+        rem >= 4, jnp.uint32(0xFFFFFFFF), jnp.where(rem <= 0, jnp.uint32(0), partial)
+    )
+
+
+# ---------------------------------------------------------------------------
+# uniform-run unpack
+# ---------------------------------------------------------------------------
+
+
+def _run_kernel_aligned(wire_ref, out_ref, *, stride_w: int, nlanes: int, nbytes: int):
+    """base%4 == 0 and stride%4 == 0: tokens are word-aligned slices."""
+    # wire block for this grid step: (BLOCK*stride_w,) u32 starting at the
+    # block's first token (BlockSpec maps grid index -> word offset).
+    w = wire_ref[...]
+    toks = w.reshape(BLOCK, stride_w)[:, :nlanes]
+    out_ref[...] = toks & _lane_mask(nbytes, nlanes)[None, :]
+
+
+def _run_kernel_general(
+    wire_ref, base_ref, out_ref, *, stride: int, nlanes: int, nbytes: int
+):
+    """Arbitrary base/stride: per-row dynamic vector load + word combine.
+
+    Row i bytes start at  base + (i0+i)*stride  (absolute); wire_ref holds
+    the whole wire, loads use dynamic slices.
+    """
+    i0 = pl.program_id(0) * BLOCK
+    mask = _lane_mask(nbytes, nlanes)
+
+    def body(i, _):
+        off = base_ref[0] + (i0 + i) * stride
+        w = off // 4
+        r = (off % 4).astype(jnp.uint32)
+        words = pl.load(wire_ref, (pl.ds(w, nlanes + 1),))
+        lo = words[:-1] >> (8 * r)
+        hi = jnp.where(r == 0, jnp.uint32(0), words[1:] << ((32 - 8 * r) % 32))
+        pl.store(out_ref, (pl.ds(i, 1), slice(None)), ((lo | hi) & mask)[None, :])
+        return 0
+
+    jax.lax.fori_loop(0, BLOCK, body, 0)
+
+
+def unpack_run(
+    wire_u32: jnp.ndarray,  # (W,) uint32 (padded; see ops.wire_to_u32)
+    base: int | jnp.ndarray,
+    stride: int,
+    count: int,  # static capacity (rows); mask invalid rows downstream
+    nbytes: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Unpack `count` fixed-width fields at base + i*stride.  Static shapes."""
+    nlanes = (nbytes + 3) // 4
+    cap = -(-count // BLOCK) * BLOCK
+    grid = cap // BLOCK
+
+    if not isinstance(base, int):
+        raise TypeError("unpack_run: base must be a static python int")
+
+    aligned = base % 4 == 0 and stride % 4 == 0 and nbytes >= 1
+    if aligned:
+        stride_w = stride // 4
+        base_w = base // 4
+        need = base_w + cap * stride_w
+        if wire_u32.shape[0] < need:
+            wire_u32 = jnp.pad(wire_u32, (0, need - wire_u32.shape[0]))
+        run = jax.lax.dynamic_slice(wire_u32, (base_w,), (cap * stride_w,))
+        out = pl.pallas_call(
+            functools.partial(
+                _run_kernel_aligned, stride_w=stride_w, nlanes=nlanes, nbytes=nbytes
+            ),
+            grid=(grid,),
+            in_specs=[pl.BlockSpec((BLOCK * stride_w,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((BLOCK, nlanes), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((cap, nlanes), jnp.uint32),
+            interpret=interpret,
+        )(run)
+        return out[:count]
+
+    base_arr = jnp.asarray([base], jnp.int32)
+    need = (base + cap * stride + 4 * nlanes) // 4 + 8
+    if wire_u32.shape[0] < need:
+        wire_u32 = jnp.pad(wire_u32, (0, need - wire_u32.shape[0]))
+    out = pl.pallas_call(
+        functools.partial(
+            _run_kernel_general, stride=stride, nlanes=nlanes, nbytes=nbytes
+        ),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(wire_u32.shape, lambda i: (0,)),  # whole wire resident
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, nlanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cap, nlanes), jnp.uint32),
+        interpret=interpret,
+    )(wire_u32, base_arr)
+    return out[:count]
+
+
+# ---------------------------------------------------------------------------
+# gather unpack (ragged offsets)
+# ---------------------------------------------------------------------------
+
+
+def _gather_kernel(wire_ref, off_ref, out_ref, *, nlanes: int, nbytes: int):
+    mask = _lane_mask(nbytes, nlanes)
+
+    def body(i, _):
+        off = off_ref[i]
+        w = off // 4
+        r = (off % 4).astype(jnp.uint32)
+        words = pl.load(wire_ref, (pl.ds(w, nlanes + 1),))
+        lo = words[:-1] >> (8 * r)
+        hi = jnp.where(r == 0, jnp.uint32(0), words[1:] << ((32 - 8 * r) % 32))
+        pl.store(out_ref, (pl.ds(i, 1), slice(None)), ((lo | hi) & mask)[None, :])
+        return 0
+
+    jax.lax.fori_loop(0, BLOCK, body, 0)
+
+
+def unpack_gather(
+    wire_u32: jnp.ndarray,
+    offsets: jnp.ndarray,  # (cap,) int32 byte offsets
+    nbytes: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    nlanes = (nbytes + 3) // 4
+    n = offsets.shape[0]
+    cap = -(-n // BLOCK) * BLOCK
+    offsets = jnp.pad(offsets, (0, cap - n)).astype(jnp.int32)
+    wire_u32 = jnp.pad(wire_u32, (0, nlanes + 8))  # safe overread tail
+    out = pl.pallas_call(
+        functools.partial(_gather_kernel, nlanes=nlanes, nbytes=nbytes),
+        grid=(cap // BLOCK,),
+        in_specs=[
+            pl.BlockSpec(wire_u32.shape, lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, nlanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cap, nlanes), jnp.uint32),
+        interpret=interpret,
+    )(wire_u32, offsets)
+    return out[:n]

@@ -1,0 +1,131 @@
+"""Step functions (train / prefill / serve) + ShapeDtypeStruct input specs.
+
+These are the units the dry-run lowers and the drivers execute.  All three
+are pure functions of (params/opt_state/cache, batch) so they jit and shard
+cleanly; samplers stay greedy (argmax) to keep serving deterministic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import decode_step, init_cache, init_params, loss_fn, prefill
+from ..models.common import dtype_of
+from ..optim import AdamWConfig, OptState, adamw_init, adamw_update, microbatched_grads
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, lr_fn=None,
+                    grad_shardings: Optional[PyTree] = None,
+                    micro_sharding_fn=None):
+    lr_fn = lr_fn or (lambda step: opt_cfg.lr)
+    if grad_shardings is not None:
+        constrain = lambda g: jax.lax.with_sharding_constraint(g, grad_shardings)
+    else:
+        constrain = lambda g: g
+    constrain_micro = micro_sharding_fn or (lambda b: b)
+
+    def train_step(params: PyTree, opt_state: OptState, batch: Dict):
+        loss, grads, metrics = microbatched_grads(
+            lambda p, b: loss_fn(p, cfg, b), params, batch, cfg.microbatch,
+            constrain=constrain, constrain_micro=constrain_micro,
+        )
+        lr = lr_fn(opt_state.step)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg, lr
+        )
+        metrics.update(opt_metrics)
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: Optional[int] = None):
+    def prefill_step(params: PyTree, batch: Dict):
+        # last_only: serving prefill needs next-token logits, not (B, S, V)
+        logits, cache = prefill(params, cfg, batch, cache_len=cache_len,
+                                last_only=True)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params: PyTree, cache: Dict, tokens: jnp.ndarray):
+        logits, cache = decode_step(params, cfg, cache, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation — dry-run food)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int, kind: str) -> Dict:
+    """Specs for the batch dict of a train/prefill step."""
+    f32 = jnp.float32
+    specs = {"tokens": _sds((B, S), jnp.int32)}
+    if kind == "train":
+        specs["labels"] = _sds((B, S), jnp.int32)
+        specs["loss_mask"] = _sds((B, S), f32)
+        specs["segment_ids"] = _sds((B, S), jnp.int32)
+        specs["positions"] = _sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        specs["vision"] = _sds((B, cfg.vision_tokens, cfg.vision_dim), f32)
+    if cfg.family == "encdec":
+        specs["audio"] = _sds((B, cfg.enc_seq, cfg.d_model), f32)
+    return specs
+
+
+def params_specs(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def opt_specs(cfg: ModelConfig) -> PyTree:
+    p = params_specs(cfg)
+    return jax.eval_shape(lambda q: adamw_init(q, cfg.opt_moments), p)
+
+
+def cache_specs(cfg: ModelConfig, B: int, cache_len: int) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, B, cache_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All inputs a dry-run cell lowers against, keyed by step argument."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "params": params_specs(cfg),
+            "opt_state": opt_specs(cfg),
+            "batch": batch_specs(cfg, B, S, "train"),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": params_specs(cfg),
+            "batch": batch_specs(cfg, B, S, "prefill"),
+        }
+    # decode: one new token against a seq_len cache
+    return {
+        "params": params_specs(cfg),
+        "cache": cache_specs(cfg, B, S),
+        "tokens": _sds((B, 1), jnp.int32),
+    }

@@ -1,0 +1,18 @@
+"""Model substrate: shared components + the unified multi-family model."""
+from .model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    layer_plan,
+    loss_fn,
+    param_count,
+    plan_period,
+    prefill,
+    stack_layers,
+)
+
+__all__ = [
+    "decode_step", "forward", "init_cache", "init_params", "layer_plan",
+    "loss_fn", "param_count", "plan_period", "prefill", "stack_layers",
+]

@@ -1,0 +1,291 @@
+"""Shared model components: norms, RoPE, initializers, losses, flash attention.
+
+Pure-JAX (pjit-friendly) implementations.  Attention uses a double-blocked
+online-softmax (flash) formulation so long-context prefill never materializes
+the full (S, T) score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = object
+
+# ---------------------------------------------------------------------------
+# dtype / init helpers
+# ---------------------------------------------------------------------------
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32, scale: float = 1.0):
+    """Truncated-normal fan-in init (stddev = scale/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(kind: str, params: Dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"], eps)
+    return layernorm(x, params["scale"], params["bias"], eps)
+
+
+def init_norm(kind: str, d: int, dtype) -> Dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "swiglu": jax.nn.silu,  # gate activation for GLU variants
+        "geglu": partial(jax.nn.gelu, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash attention (pure JAX, online softmax)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _block_mask(
+    q_pos: jnp.ndarray,  # (bq,)
+    k_pos: jnp.ndarray,  # (bk,)
+    causal: bool,
+    window: Optional[int],
+    q_seg: Optional[jnp.ndarray] = None,  # (B, bq)
+    k_seg: Optional[jnp.ndarray] = None,  # (B, bk)
+) -> jnp.ndarray:
+    """Additive mask (B?, bq, bk) in fp32; True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    if q_seg is not None:
+        seg = q_seg[:, :, None] == k_seg[:, None, :]
+        m = m[None] & seg
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, K, G, D)   K = kv heads, G = q heads per kv
+    k: jnp.ndarray,  # (B, T, K, D)
+    v: jnp.ndarray,  # (B, T, K, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    q_offset: int | jnp.ndarray = 0,
+    segment_q: Optional[jnp.ndarray] = None,  # (B, S)
+    segment_k: Optional[jnp.ndarray] = None,  # (B, T)
+    kv_len: Optional[jnp.ndarray] = None,  # valid prefix length of k/v
+    block_q: int = 512,
+    block_k: int = 1024,
+    scale: Optional[float] = None,
+    p_bf16: bool = False,
+) -> jnp.ndarray:
+    """Double-blocked online-softmax attention.  Never materializes (S, T).
+
+    Returns (B, S, K, G, D).  `q_offset` is the absolute position of q[0]
+    (decode/prefill continuation).  `kv_len` masks tail slots of the cache.
+    """
+    B, S, K, G, D = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    # pad S, T to block multiples
+    Sp = (S + block_q - 1) // block_q * block_q
+    Tp = (T + block_k - 1) // block_k * block_k
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    sq = jnp.pad(segment_q, ((0, 0), (0, Sp - S)), constant_values=-1) if segment_q is not None else None
+    sk = jnp.pad(segment_k, ((0, 0), (0, Tp - T)), constant_values=-2) if segment_k is not None else None
+
+    nq, nk = Sp // block_q, Tp // block_k
+    qp = qp.reshape(B, nq, block_q, K, G, D)
+    kp = kp.reshape(B, nk, block_k, K, D)
+    vp = vp.reshape(B, nk, block_k, K, D)
+
+    valid_t = jnp.arange(Tp, dtype=jnp.int32).reshape(nk, block_k)
+    t_ok = valid_t < (T if kv_len is None else kv_len)  # (nk, bk) bool
+
+    def q_block(qi, qb, sqb):
+        # qb: (B, bq, K, G, D)
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q, dtype=jnp.int32)
+
+        def kv_step(carry, inputs):
+            acc, m_run, l_run = carry
+            kb, vb, kj, tok, skb = inputs
+            k_pos = kj * block_k + jnp.arange(block_k, dtype=jnp.int32)
+            s = jnp.einsum(
+                "bqkgd,btkd->bqkgt", qb.astype(jnp.float32), kb.astype(jnp.float32)
+            ) * scale
+            s = softcap(s, logit_cap)
+            mask = _block_mask(q_pos, k_pos, causal, window, sqb, skb)  # (B?,bq,bk)
+            if mask.ndim == 2:
+                mask = mask[None]
+            mask = jnp.where(tok[None, None, :], mask, NEG_INF)
+            s = s + mask[:, :, None, None, :]  # (B,bq,K,G,bk)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            if p_bf16:  # halve the dominant HBM stream (p is the S*T matrix)
+                pv = jnp.einsum(
+                    "bqkgt,btkd->bqkgd", p.astype(jnp.bfloat16), vb.astype(jnp.bfloat16)
+                ).astype(jnp.float32)
+            else:
+                pv = jnp.einsum("bqkgt,btkd->bqkgd", p, vb.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, block_q, K, G, D), jnp.float32)
+        m0 = jnp.full((B, block_q, K, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, block_q, K, G), jnp.float32)
+        kjs = jnp.arange(nk, dtype=jnp.int32)
+        skb = (
+            sk.reshape(B, nk, block_k).swapaxes(0, 1)
+            if sk is not None
+            else jnp.zeros((nk, B, block_k), jnp.int32)
+        )
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            kv_step,
+            (acc0, m0, l0),
+            (kp.swapaxes(0, 1), vp.swapaxes(0, 1), kjs, t_ok, skb),
+        )
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)
+        return out
+
+    sq_blocks = (
+        sq.reshape(B, nq, block_q).swapaxes(0, 1)
+        if sq is not None
+        else jnp.zeros((nq, B, block_q), jnp.int32)
+    )
+    outs = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.arange(nq, dtype=jnp.int32), qp.swapaxes(0, 1), sq_blocks),
+    )  # (nq, B, bq, K, G, D)
+    out = outs.swapaxes(0, 1).reshape(B, Sp, K, G, D)[:, :S]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, K, G, D)
+    k_cache: jnp.ndarray,  # (B, T, K, D)
+    v_cache: jnp.ndarray,  # (B, T, K, D)
+    kv_len: jnp.ndarray,  # scalar or (B,) valid length
+    *,
+    logit_cap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token attention against a cache (no blocking needed)."""
+    B, T, K, D = k_cache.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum(
+        "bqkgd,btkd->bqkgt", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    s = softcap(s, logit_cap)
+    pos = jnp.arange(T, dtype=jnp.int32)
+    valid = pos[None, :] < jnp.broadcast_to(jnp.asarray(kv_len), (B,))[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgt,btkd->bqkgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(
+    logits: jnp.ndarray,  # (B, S, V)
+    targets: jnp.ndarray,  # (B, S) int32
+    mask: Optional[jnp.ndarray] = None,  # (B, S) 0/1
+    z_loss: float = 0.0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((logits.argmax(-1) == targets) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": mask.sum()}

@@ -1,0 +1,140 @@
+"""AdamW with fp32 master weights (params may be bf16) and global-norm clip.
+
+Hand-rolled (no optax dependency): the state is a plain pytree so the HGum
+checkpoint layer serializes it like any other message.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # "fp32": plain moments.  "q8": first moment int8 (blockwise absmax,
+    # block 256) + second moment bf16 — 8.06 B/param of optimizer state
+    # instead of 12, the knob that fits 398B AdamW on the 2-pod mesh
+    # (EXPERIMENTS.md §Perf; convergence tested in tests/test_optim.py).
+    moments: str = "fp32"
+
+
+Q8_BLOCK = 256
+
+
+def _q8_encode(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % Q8_BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, Q8_BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(fp), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(fp / scale[:, None]), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _q8_decode(enc: Dict[str, jnp.ndarray], shape) -> jnp.ndarray:
+    fp = enc["q"].astype(jnp.float32) * enc["s"][:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return fp.reshape(-1)[:n].reshape(shape)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class OptState:
+    step: jnp.ndarray  # scalar int32
+    mu: PyTree  # first moment (fp32)
+    nu: PyTree  # second moment (fp32)
+    master: PyTree  # fp32 master copy of params
+
+
+def adamw_init(params: PyTree, moments: str = "fp32") -> OptState:
+    if moments == "q8":
+        mu = jax.tree.map(lambda x: _q8_encode(jnp.zeros(x.shape, jnp.float32)), params)
+        nu = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.bfloat16), params)
+    else:
+        f32 = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+        mu, nu = f32(params), f32(params)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=mu,
+        nu=nu,
+        # copy=True: fp32 params must not alias the master (donation safety)
+        master=jax.tree.map(lambda x: jnp.array(x, jnp.float32, copy=True), params),
+    )
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: PyTree,
+    state: OptState,
+    params: PyTree,
+    cfg: AdamWConfig,
+    lr: jnp.ndarray | float,
+) -> Tuple[PyTree, OptState, Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Returns (new params in original dtype, state, stats)."""
+    metrics = {}
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1**t
+    c2 = 1.0 - cfg.b2**t
+
+    q8 = cfg.moments == "q8"
+
+    def upd(g, mu, nu, m):
+        g = g.astype(jnp.float32)
+        if q8:
+            mu_f = _q8_decode(mu, g.shape)
+            nu_f = nu.astype(jnp.float32)
+        else:
+            mu_f, nu_f = mu, nu
+        mu_f = cfg.b1 * mu_f + (1 - cfg.b1) * g
+        nu_f = cfg.b2 * nu_f + (1 - cfg.b2) * g * g
+        delta = (mu_f / c1) / (jnp.sqrt(nu_f / c2) + cfg.eps)
+        m = m - lr * (delta + cfg.weight_decay * m)
+        if q8:
+            return _q8_encode(mu_f), nu_f.astype(jnp.bfloat16), m
+        return mu_f, nu_f, m
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    is_enc = lambda t: isinstance(t, dict) and set(t) == {"q", "s"}
+    flat_mu = treedef.flatten_up_to(state.mu) if not q8 else [
+        sub for sub in jax.tree.flatten(state.mu, is_leaf=is_enc)[0]
+    ]
+    flat_nu = treedef.flatten_up_to(state.nu)
+    flat_m = treedef.flatten_up_to(state.master)
+    out = [upd(g, mu, nu, m) for g, mu, nu, m in zip(flat_g, flat_mu, flat_nu, flat_m)]
+    mu = jax.tree.unflatten(treedef, [o[0] for o in out])  # q8: dict leaves
+    nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    flat_p = treedef.flatten_up_to(params)
+    new_params = jax.tree.unflatten(
+        treedef,
+        [m.astype(p.dtype) for m, p in zip([o[2] for o in out], flat_p)],
+    )
+    metrics["param_norm"] = global_norm(master)
+    return new_params, OptState(step=step, mu=mu, nu=nu, master=master), metrics

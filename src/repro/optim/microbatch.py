@@ -1,0 +1,67 @@
+"""Gradient-accumulation microbatching: scan over microbatch slices.
+
+Keeps per-microbatch live activations 1/k of the full batch — the knob that
+lets ``train_4k`` cells fit 16 GB/chip (see EXPERIMENTS.md per-cell notes).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def microbatched_grads(
+    loss_fn: Callable[[PyTree, Dict], Tuple[jnp.ndarray, Dict]],
+    params: PyTree,
+    batch: Dict[str, jnp.ndarray],
+    n_micro: int,
+    constrain: Callable[[PyTree], PyTree] = lambda g: g,
+    constrain_micro: Callable[[PyTree], PyTree] = lambda b: b,
+) -> Tuple[jnp.ndarray, PyTree, Dict]:
+    """Mean loss/grads over `n_micro` slices of the leading batch axis.
+
+    `constrain` (e.g. with_sharding_constraint to the param layout) pins the
+    gradient accumulator's sharding — without it the scan carry can
+    materialize unsharded (full-size per device) and OOM the dry-run.
+    `constrain_micro` pins the (n_micro, b/n_micro, ...) reshape to
+    P(None, batch_axes, ...): the SPMD partitioner otherwise re-shards the
+    split batch across the wrong axes and every activation downstream
+    inherits the damage (measured: 4x per-device batch inflation).
+    """
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, constrain(grads), metrics
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, f"batch {b} not divisible by {n_micro}"
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = constrain_micro(jax.tree.map(reshape, batch))
+
+    def body(carry, mb):
+        acc_loss, acc_grads, acc_metrics = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc_grads = constrain(jax.tree.map(jnp.add, acc_grads, grads))
+        acc_metrics = {
+            k: acc_metrics.get(k, 0.0) + v for k, v in metrics.items()
+        }
+        return (acc_loss + loss, acc_grads, acc_metrics), None
+
+    zero_grads = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    # run one microbatch eagerly to learn the metrics structure
+    (l0, m0), g0 = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, jax.tree.map(lambda x: x[0], micro)
+    )
+    g0 = constrain(jax.tree.map(lambda a, b: a.astype(jnp.float32) + b, g0, zero_grads))
+    rest = jax.tree.map(lambda x: x[1:], micro)
+    (loss, grads, metrics), _ = jax.lax.scan(body, (l0, g0, m0), rest)
+    inv = 1.0 / n_micro
+    grads = jax.tree.map(lambda g: (g * inv).astype(jnp.float32), grads)
+    metrics = {k: v * inv for k, v in metrics.items()}
+    return loss * inv, grads, metrics

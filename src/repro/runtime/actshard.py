@@ -1,0 +1,105 @@
+"""Activation-sharding hook.
+
+Models are mesh-agnostic; launchers install a constrainer that pins named
+activation classes to PartitionSpecs (with_sharding_constraint).  Without
+the pin, SPMD propagation lets weight shardings leak into the residual
+stream and every loop iteration downstream pays resharding collectives
+(measured on yi-6b train_4k: 894 GB/device of all-reduce in the attention
+backward, 47x the constrained layout).
+
+Kinds:
+  residual — (B, S, d) layer inputs/outputs: P(batch, None, None)
+  logits   — (B, S, V): P(batch, None, vocab_axis)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable
+
+import jax
+
+Constrainer = Callable[[jax.Array, str], jax.Array]
+
+_constrainer: contextvars.ContextVar[Constrainer] = contextvars.ContextVar(
+    "act_constrainer", default=lambda x, kind: x
+)
+
+
+def constrain(x, kind: str):
+    """Apply the installed activation constraint (identity by default)."""
+    return _constrainer.get()(x, kind)
+
+
+@contextlib.contextmanager
+def use_constrainer(fn: Constrainer):
+    tok = _constrainer.set(fn)
+    try:
+        yield
+    finally:
+        _constrainer.reset(tok)
+
+
+def mesh_constrainer(mesh, rules, global_batch: int) -> Constrainer:
+    """Standard constrainer: batch axes on dim 0, vocab over tensor axis."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from .sharding import batch_pspec
+
+    def fn(x, kind):
+        if x.ndim < 2:
+            return x
+        if kind == "moe_buffer":  # (E, C, d|ff)
+            # EP when E divides the tensor axis; otherwise shard the
+            # capacity dim over BOTH axes (mixtral E=8 < 16: a replicated
+            # buffer measured 3.7 TB/device on prefill_32k).
+            tsz = mesh.shape.get(rules.tensor, 1)
+            fsz = mesh.shape.get(rules.fsdp, 1) if isinstance(rules.fsdp, str) else 1
+            e_ax = rules.tensor if x.shape[0] % tsz == 0 else None
+            C = x.shape[1]
+            if e_ax is not None:
+                c_ax = rules.fsdp if C % fsz == 0 else None
+            elif C % (fsz * tsz) == 0:
+                c_ax = (rules.fsdp, rules.tensor)
+            elif C % fsz == 0:
+                c_ax = rules.fsdp
+            elif C % tsz == 0:
+                c_ax = rules.tensor
+            else:
+                c_ax = None
+            spec = P(e_ax, c_ax, *([None] * (x.ndim - 2)))
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        if kind == "tokens_flat":  # (B*S, d): rows are B-major
+            tsz = mesh.shape.get(rules.tensor, 1)
+            fsz = mesh.shape.get(rules.fsdp, 1) if isinstance(rules.fsdp, str) else 1
+            n = x.shape[0]
+            if n % (fsz * tsz) == 0:
+                ax = (rules.fsdp, rules.tensor)
+            elif n % fsz == 0:
+                ax = rules.fsdp
+            elif n % tsz == 0:
+                ax = rules.tensor
+            else:
+                ax = None
+            spec = P(ax, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        bax = batch_pspec(mesh, rules, x.shape[0])
+        used = set()
+        for entry in bax:
+            if isinstance(entry, (tuple, list)):
+                used.update(entry)
+            elif entry is not None:
+                used.add(entry)
+        if kind == "residual":
+            spec = P(*(list(bax) + [None] * (x.ndim - 1)))
+        elif kind == "logits":
+            ax = rules.tensor if (
+                x.shape[-1] % mesh.shape[rules.tensor] == 0
+                and rules.tensor not in used  # batch may own every axis (pure DP)
+            ) else None
+            spec = P(*(list(bax) + [None] * (x.ndim - 2) + [ax]))
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return fn

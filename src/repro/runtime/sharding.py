@@ -1,0 +1,256 @@
+"""Sharding rules: map every parameter / activation / cache leaf to a
+PartitionSpec over the production mesh (DESIGN.md §6).
+
+Baseline layout (the perf-iteration surface — see EXPERIMENTS.md §Perf):
+
+* batch over ``("pod", "data")`` (pod is an outer DP axis when present);
+* params: FSDP over ``data`` on one matrix dim, TP over ``model`` on the
+  other (vocab / d_ff / heads over ``model``);
+* MoE experts: EP over ``model`` when the expert count divides the axis,
+  otherwise TP inside each expert;
+* KV caches: batch over data axes, kv-heads over ``model`` when divisible
+  (MQA kv=1 falls back to head-dim or time sharding);
+* small vectors (norms, biases, scalars) replicated.
+
+Divisibility is always checked against the actual mesh axis sizes — a rule
+that does not divide falls back to replication on that dim, so every config
+lowers on every mesh.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ShardRules:
+    """Tunable layout knobs (hillclimbed per cell in EXPERIMENTS.md §Perf)."""
+
+    batch: Tuple[str, ...] = ("pod", "data")  # filtered by mesh axes present
+    fsdp: str = "data"
+    tensor: str = "model"
+    # MoE
+    expert_parallel: bool = True  # EP over `tensor` when divisible
+    # caches
+    kv_head_sharded: bool = True
+    kv_time_sharded_when_b1: bool = True  # long_500k: shard cache time dim
+    # embeddings
+    vocab_sharded: bool = True
+    # activations
+    seq_sharded_acts: bool = False  # sequence parallelism for norms/residual
+    # replicate params smaller than this many elements (0 = off).  Small
+    # models (xlstm-125m) pay per-op resharding collectives worth more than
+    # the replicated bytes.
+    replicate_below: int = 0
+
+
+def _axes(mesh: Mesh, names: Tuple[str, ...]) -> Tuple[str, ...]:
+    return tuple(n for n in names if n in mesh.axis_names)
+
+
+def _size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    s = 1
+    for n in names:
+        s *= mesh.shape[n]
+    return s
+
+
+def _fit(mesh: Mesh, dim: int, names) -> Optional[Any]:
+    """Axis name(s) if `dim` divides their total size, else None."""
+    if names is None:
+        return None
+    if isinstance(names, str):
+        names = (names,)
+    names = _axes(mesh, tuple(names))
+    if not names:
+        return None
+    if dim % _size(mesh, names) == 0:
+        return names if len(names) > 1 else names[0]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (by leaf path)
+# ---------------------------------------------------------------------------
+
+# (regex on leaf path, per-dim axis *requests*); first match wins.
+# dim requests are resolved against shapes with divisibility fallback.
+def _param_rules(rules: ShardRules):
+    f, t = rules.fsdp, rules.tensor
+    return [
+        # embeddings / unembedding.  Vocab over `tensor`, d_model REPLICATED:
+        # XLA partitions the token gather over a vocab-sharded operand with
+        # the local-mask + all-reduce pattern, and the tied unembed produces
+        # vocab-sharded logits.  (Sharding d_model too triggers involuntary
+        # full rematerialization in the SPMD partitioner — see DESIGN.md §6.)
+        (r"\['embed'\]$", ((t if rules.vocab_sharded else None), None)),
+        (r"\['lm_head'\]$", (None, t)),
+        (r"\['vision_proj'\]$", (None, f)),
+        # attention
+        (r"\['attn'\]\['wq'\]$", (f, t)),
+        (r"\['attn'\]\['wk'\]$", (f, t)),
+        (r"\['attn'\]\['wv'\]$", (f, t)),
+        (r"\['attn'\]\['wo'\]$", (t, f)),
+        # dense ffn
+        (r"\['ffn'\]\['wi'\]$", (f, t)),
+        (r"\['ffn'\]\['wg'\]$", (f, t)),
+        (r"\['ffn'\]\['wo'\]$", (t, f)),
+        # moe (leading dim = experts)
+        (r"\['moe'\]\['router'\]$", (f, None)),
+        (r"\['moe'\]\['w[ig]'\]$", ("__EP__", f, t)),
+        (r"\['moe'\]\['wo'\]$", ("__EP__", t, f)),
+        # mamba
+        (r"\['mamba'\]\['in_proj'\]$", (f, t)),
+        (r"\['mamba'\]\['out_proj'\]$", (t, f)),
+        (r"\['mamba'\]\['conv_[wb]'\]$", None),
+        # mlstm / slstm
+        (r"\['mlstm'\]\['w[qkv]'\]$", (f, t)),
+        (r"\['mlstm'\]\['wo_gate'\]$", (f, t)),
+        (r"\['mlstm'\]\['out_proj'\]$", (t, f)),
+        (r"\['mlstm'\]\['wif'\]$", (f, None)),
+        (r"\['slstm'\]\['[wr][ifzo]'\]$", (f, t)),
+    ]
+
+
+def param_pspec(
+    path: str, shape: Tuple[int, ...], cfg: ModelConfig, mesh: Mesh, rules: ShardRules
+) -> P:
+    # q8 optimizer-moment blocks/scales: flattened (n_blocks, 256)/(n_blocks,)
+    # — shard the block dim over every available axis (it is huge).
+    if re.search(r"\['[qs]'\]$", path):
+        for axes in (("pod", "data", "model"), ("data", "model"),
+                     ("pod", "data"), ("data",), ("model",)):
+            got = _fit(mesh, shape[0], axes)
+            if got is not None:
+                return P(*( [got] + [None] * (len(shape) - 1) ))
+        return P()
+    n_elems = 1
+    for dim in shape:
+        n_elems *= dim
+    if rules.replicate_below and n_elems < rules.replicate_below:
+        return P()
+    for pat, req in _param_rules(rules):
+        if re.search(pat, path):
+            if req is None or len(shape) != len(req):
+                return P()
+            out = []
+            for dim, want in zip(shape, req):
+                if want == "__EP__":
+                    want = rules.tensor if rules.expert_parallel else None
+                    got = _fit(mesh, dim, want)
+                    # EP eats the tensor axis for this tensor: drop later dims'
+                    # tensor request if the expert dim took it.
+                    if got is not None:
+                        out.append(got)
+                        # remaining dims may not reuse the same axis
+                        rest = [
+                            _fit(mesh, d, w if w != got and w != rules.tensor else None)
+                            for d, w in zip(shape[len(out):], req[len(out):])
+                        ]
+                        out.extend(rest)
+                        return P(*out)
+                    out.append(None)
+                    continue
+                out.append(_fit(mesh, dim, want))
+            return P(*out)
+    return P()  # norms, biases, scalars: replicated
+
+
+def param_shardings(
+    params_or_shapes: PyTree, cfg: ModelConfig, mesh: Mesh,
+    rules: Optional[ShardRules] = None,
+) -> PyTree:
+    rules = rules or ShardRules()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_or_shapes)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        spec = param_pspec(path, tuple(leaf.shape), cfg, mesh, rules)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activations / batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspec(mesh: Mesh, rules: ShardRules, global_batch: int) -> P:
+    axes = _axes(mesh, rules.batch)
+    # drop trailing axes until the batch divides
+    while axes and global_batch % _size(mesh, axes) != 0:
+        axes = axes[:-1]
+    return P(axes if axes else None)
+
+
+def batch_shardings(batch: PyTree, mesh: Mesh, rules: Optional[ShardRules] = None,
+                    global_batch: Optional[int] = None) -> PyTree:
+    rules = rules or ShardRules()
+
+    def spec(x):
+        gb = global_batch or x.shape[0]
+        bp = batch_pspec(mesh, rules, gb)
+        return NamedSharding(mesh, P(*(list(bp) + [None] * (len(x.shape) - 1))))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspec(
+    path: str, shape: Tuple[int, ...], cfg: ModelConfig, mesh: Mesh, rules: ShardRules
+) -> P:
+    bax = batch_pspec(mesh, rules, shape[0])[0] if shape else None
+    if re.search(r"\['pos'\]$", path):
+        return P(bax)
+    if re.search(r"\['(k|v)'\]$", path) or "enc_kv" in path:
+        # (B, T, K, D).  Preference order for the tensor axis:
+        #   kv heads (GQA with K % axis == 0) > head_dim (MQA/GQA with few
+        #   kv heads — the serving-standard layout; D=128 always divides)
+        #   > time (only when B=1: decode writes along T, so a time-sharded
+        #   cache pays a resharding collective per step otherwise).
+        B, T, K, D = shape
+        kv_ax = _fit(mesh, K, rules.tensor) if rules.kv_head_sharded else None
+        d_ax = None
+        t_ax = None
+        if kv_ax is None:
+            d_ax = _fit(mesh, D, rules.tensor)
+        if kv_ax is None and d_ax is None and bax is None and rules.kv_time_sharded_when_b1:
+            t_ax = _fit(mesh, T, rules.tensor)
+        return P(bax, t_ax, kv_ax, d_ax)
+    if re.search(r"\['ssm'\]$", path):  # (B, nh, P, N)
+        return P(bax, _fit(mesh, shape[1], rules.tensor), None, None)
+    if re.search(r"\['conv'\]$", path):  # (B, K-1, d_in)
+        return P(bax, None, _fit(mesh, shape[2], rules.tensor))
+    if re.search(r"\['C'\]$", path):  # mlstm (B, nh, dh, dh)
+        return P(bax, _fit(mesh, shape[1], rules.tensor), None, None)
+    if re.search(r"\['n'\]$", path) and len(shape) == 3:
+        return P(bax, _fit(mesh, shape[1], rules.tensor), None)
+    if len(shape) == 2:  # slstm states (B, d) / mlstm m (B, nh)
+        return P(bax, _fit(mesh, shape[1], rules.tensor))
+    return P(*([bax] + [None] * (len(shape) - 1)))
+
+
+def cache_shardings(
+    cache: PyTree, cfg: ModelConfig, mesh: Mesh, rules: Optional[ShardRules] = None
+) -> PyTree:
+    rules = rules or ShardRules()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        out.append(NamedSharding(mesh, cache_pspec(path, tuple(leaf.shape), cfg, mesh, rules)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,12 @@
+import os
+
+# Tests run on small fake-device counts (NOT 512 — that is dryrun-only).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,108 @@
+"""HGum data plane: bulk SER byte-identity, device decode, prefetch."""
+import numpy as np
+import pytest
+
+from repro.core import plan_from_wire, ser_sw_to_hw
+from repro.data import HGumBatchPipeline, Prefetcher, SyntheticCorpus, pack_documents
+from repro.data.pipeline import batch_plan, decode_batch, serialize_batch
+from repro.data.schemas import batch_schema
+
+
+def test_bulk_ser_byte_identical_to_reference(rng):
+    corpus = SyntheticCorpus(512, seed=3)
+    tokens, segids = pack_documents(corpus.docs(), 4, 32)
+    wire = serialize_batch(tokens, segids)
+    schema = batch_schema(32)
+    msg = {"rows": [
+        {"tokens": list(map(int, tokens[b])), "segids": list(map(int, segids[b]))}
+        for b in range(4)
+    ]}
+    assert wire == ser_sw_to_hw(schema, msg)
+
+
+def test_static_plan_matches_wire_plan():
+    corpus = SyntheticCorpus(512, seed=5)
+    tokens, segids = pack_documents(corpus.docs(), 3, 16)
+    wire = serialize_batch(tokens, segids)
+    p1 = batch_plan(3, 16)
+    p2 = plan_from_wire(batch_schema(16), wire)
+    for k in p2.offsets:
+        n = p2.counts[k]
+        assert p1.counts[k] == n
+        np.testing.assert_array_equal(p1.offsets[k][:n], p2.offsets[k][:n])
+
+
+def test_decode_batch_roundtrip():
+    corpus = SyntheticCorpus(512, seed=7)
+    tokens, segids = pack_documents(corpus.docs(), 4, 32)
+    wire = serialize_batch(tokens, segids)
+    batch = decode_batch(wire, 4, 32)
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]), tokens.astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(batch["segment_ids"]), segids.astype(np.int32)
+    )
+    # labels are next-token within segment; mask zero at segment boundaries
+    lm = np.asarray(batch["loss_mask"])
+    toks = np.asarray(batch["tokens"])
+    labels = np.asarray(batch["labels"])
+    segs = np.asarray(batch["segment_ids"])
+    B, S = toks.shape
+    for b in range(B):
+        for s in range(S - 1):
+            if lm[b, s]:
+                assert labels[b, s] == toks[b, s + 1]
+                assert segs[b, s] == segs[b, s + 1]
+    assert lm[:, -1].sum() == 0  # last position never scored
+
+
+def test_positions_restart_per_segment():
+    corpus = SyntheticCorpus(512, seed=11)
+    tokens, segids = pack_documents(corpus.docs(), 2, 64)
+    wire = serialize_batch(tokens, segids)
+    batch = decode_batch(wire, 2, 64)
+    segs = np.asarray(batch["segment_ids"])
+    pos = np.asarray(batch["positions"])
+    for b in range(2):
+        for s in range(1, 64):
+            if segs[b, s] != segs[b, s - 1]:
+                assert pos[b, s] == 0, (b, s)
+            else:
+                assert pos[b, s] == pos[b, s - 1] + 1
+
+
+def test_pipeline_iterates():
+    pipe = HGumBatchPipeline(vocab=256, batch=2, seq=32, seed=0)
+    b1, b2 = next(pipe), next(pipe)
+    assert b1["tokens"].shape == (2, 32)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+
+
+def test_prefetcher_orders_and_closes():
+    import itertools
+    c = itertools.count()
+    pf = Prefetcher(lambda: next(c), depth=3)
+    vals = [pf.get() for _ in range(8)]
+    pf.close()
+    assert vals == sorted(vals)
+
+
+def test_prefetcher_surfaces_errors():
+    def boom():
+        raise RuntimeError("producer died")
+    pf = Prefetcher(boom, depth=1)
+    import time
+    time.sleep(0.2)
+    with pytest.raises(RuntimeError):
+        pf.get(timeout=2)
+    pf.close()
+
+
+def test_straggler_watchdog():
+    import time as _t
+    from repro.data.prefetch import StragglerWatchdog
+    dog = StragglerWatchdog(threshold=3.0)
+    for i in range(10):
+        dog.start(); _t.sleep(0.002); assert dog.stop() is False
+    dog.start(); _t.sleep(0.05)
+    assert dog.stop() is True
+    assert dog.flagged == 1

@@ -1,0 +1,181 @@
+"""Property tests: the FSM engines against the software oracles.
+
+Invariants (paper §III, §IV):
+ * sw2hw: DesFSM(ser_sw_to_hw(msg)) emits exactly msg_to_des_tokens(msg).
+ * hw2sw: SerFSM emits the trailing-count wire; des_hw_to_sw parses it back.
+ * hw2hw: SerFSM -> frames -> DesFSM is identity on token streams for any
+   frame size >= 1 phit.
+ * tokens_to_msg inverts msg_to_des_tokens.
+"""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ClientSchema, DesFSM, Schema, SerFSM, build_rom,
+    des_hw_to_sw, des_sw_oracle, msg_to_des_tokens, random_message,
+    ser_hw_to_sw_reference, ser_sw_to_hw, strip_for_ser, tokens_to_msg,
+)
+
+# ---------------------------------------------------------------------------
+# hypothesis strategies: random schemas + conforming messages
+# ---------------------------------------------------------------------------
+
+_FIELD_NAMES = [f"f{i}" for i in range(8)]
+
+
+@st.composite
+def schema_type(draw, depth):
+    kinds = ["bytes"] * 3 + (["array", "list", "struct"] if depth < 3 else [])
+    k = draw(st.sampled_from(kinds))
+    if k == "bytes":
+        return ["Bytes", draw(st.sampled_from([1, 2, 4, 8, 16]))]
+    if k == "array":
+        return ["Array", draw(schema_type(depth + 1))]
+    if k == "list":
+        return ["List", draw(schema_type(depth + 1))]
+    return ["Struct", "S%d" % (depth + 1)]  # S1..S3 are defined below
+
+
+@st.composite
+def schemas(draw):
+    # build referenced structs S1..S3 bottom-up so references resolve
+    obj = {}
+    for d in (3, 2, 1):
+        nf = draw(st.integers(1, 3))
+        obj[f"S{d}"] = [
+            [f"g{d}_{i}",
+             ["Bytes", draw(st.sampled_from([1, 2, 4]))] if d == 3
+             else draw(schema_type(d))]
+            for i in range(nf)
+        ]
+    nf = draw(st.integers(1, 4))
+    fields = [[_FIELD_NAMES[i], draw(schema_type(0))] for i in range(nf)]
+    obj = {"Msg": fields, **obj}
+    return Schema.from_json(obj)
+
+
+def tok_tuple(ts):
+    return [(t.kind, t.value, t.tag) for t in ts]
+
+
+@settings(max_examples=60, deadline=None)
+@given(schemas(), st.integers(0, 2**32 - 1))
+def test_sw2hw_des_matches_oracle(schema, seed):
+    rng = np.random.default_rng(seed)
+    msg = random_message(schema, rng, max_elems=4)
+    wire = ser_sw_to_hw(schema, msg)
+    assert des_sw_oracle(schema, wire) == msg
+    rom = build_rom(schema)
+    res = DesFSM(rom, "sw2hw").run(wire)
+    assert tok_tuple(res.tokens) == tok_tuple(msg_to_des_tokens(schema, msg))
+    assert tokens_to_msg(schema, res.tokens) == msg
+
+
+@settings(max_examples=60, deadline=None)
+@given(schemas(), st.integers(0, 2**32 - 1))
+def test_hw2sw_ser_and_reverse_parse(schema, seed):
+    rng = np.random.default_rng(seed)
+    msg = random_message(schema, rng, max_elems=4)
+    rom = build_rom(schema)
+    toks = strip_for_ser(msg_to_des_tokens(schema, msg))
+    res = SerFSM(rom, "hw2sw").run(toks)
+    assert res.wire == ser_hw_to_sw_reference(schema, msg)
+    assert des_hw_to_sw(schema, res.wire) == msg
+
+
+@settings(max_examples=60, deadline=None)
+@given(schemas(), st.integers(0, 2**32 - 1), st.sampled_from([1, 2, 5, 500]))
+def test_hw2hw_loopback(schema, seed, frame_phits):
+    rng = np.random.default_rng(seed)
+    msg = random_message(schema, rng, max_elems=4)
+    rom = build_rom(schema)
+    oracle = msg_to_des_tokens(schema, msg)
+    ser = SerFSM(rom, "hw2hw", frame_phits=frame_phits).run(strip_for_ser(oracle))
+    des = DesFSM(rom, "hw2hw").run(ser.wire)
+    assert tok_tuple(des.tokens) == tok_tuple(oracle)
+
+
+@settings(max_examples=40, deadline=None)
+@given(schemas(), st.integers(0, 2**32 - 1))
+def test_client_schema_tags_propagate(schema, seed):
+    from repro.core import all_token_paths
+    rng = np.random.default_rng(seed)
+    msg = random_message(schema, rng, max_elems=3)
+    paths = all_token_paths(schema)
+    client = ClientSchema({p: i for i, p in enumerate(paths)})
+    rom = build_rom(schema, client)
+    wire = ser_sw_to_hw(schema, msg)
+    res = DesFSM(rom, "sw2hw").run(wire)
+    oracle = msg_to_des_tokens(schema, msg, client)
+    assert tok_tuple(res.tokens) == tok_tuple(oracle)
+    # every token now carries a real tag
+    assert all(t.tag >= 0 for t in res.tokens)
+
+
+# ---------------------------------------------------------------------------
+# paper fig. 3/4 worked examples
+# ---------------------------------------------------------------------------
+
+
+def test_paper_fig3_des_example():
+    schema = Schema.from_json({
+        "Msg": [["a", ["Bytes", 2]], ["b", ["Bytes", 2]], ["c", ["Bytes", 4]]],
+    })
+    client = ClientSchema.from_json({"a": 0, "b": 1, "c": 2})
+    rom = build_rom(schema, client)
+    wire = (0x1234).to_bytes(2, "little") + (0x5678).to_bytes(2, "little") + \
+           (0xDEADBEEF).to_bytes(4, "little")
+    res = DesFSM(rom, "sw2hw", phit_bytes=4).run(wire)
+    assert [(t.value, t.tag) for t in res.tokens] == [
+        (0x1234, 0), (0x5678, 1), (0xDEADBEEF, 2)]
+
+
+def test_paper_token_stream_example():
+    """§III-C1: list a with one element, inner array with two elements."""
+    schema = Schema.from_json({
+        "Msg": [["a", ["List", ["Array", ["Struct", "Tuple"]]]],
+                 ["b", ["Bytes", 1]]],
+        "Tuple": [["x", ["Bytes", 4]], ["y", ["Bytes", 8]]],
+    })
+    client = ClientSchema.from_json({"a.elem.end": 5})  # array-end emitted
+    msg = {"a": [[{"x": 1, "y": 2}, {"x": 3, "y": 4}]], "b": 9}
+    toks = msg_to_des_tokens(schema, msg, client)
+    from repro.core import (TOK_ARRAY_END, TOK_ARRAY_LENGTH, TOK_DATA,
+                            TOK_LIST_BEGIN, TOK_LIST_END)
+    kinds = [t.kind for t in toks]
+    assert kinds == [
+        TOK_LIST_BEGIN,      # a.list-begin
+        TOK_ARRAY_LENGTH,    # a[0].array-length
+        TOK_DATA, TOK_DATA,  # a[0][0].x .y
+        TOK_DATA, TOK_DATA,  # a[0][1].x .y
+        TOK_ARRAY_END,       # a[0].array-end
+        TOK_LIST_END,        # a.list-end
+        TOK_DATA,            # b
+    ]
+    rom = build_rom(schema, client)
+    res = DesFSM(rom, "sw2hw").run(ser_sw_to_hw(schema, msg))
+    assert tok_tuple(res.tokens) == tok_tuple(toks)
+
+
+def test_framing_ambiguity_schema_fig12():
+    """The paper's Fig. 12 nested-list disambiguation cases (§IV-C)."""
+    schema = Schema.from_json({
+        "Msg": [["a", ["Bytes", 4]],
+                 ["b", ["List", ["Struct", "Foo"]]],
+                 ["d", ["Bytes", 4]]],
+        "Foo": [["c", ["List", ["Bytes", 4]]]],
+    })
+    rom = build_rom(schema)
+    for msg in (
+        {"a": 1, "b": [], "d": 2},                                  # case 1
+        {"a": 1, "b": [{"c": []}], "d": 2},                         # case 2
+        {"a": 1, "b": [{"c": [7, 8]}], "d": 2},                     # case 3
+        {"a": 1, "b": [{"c": [7]}, {"c": []}, {"c": [1, 2, 3]}], "d": 2},
+    ):
+        oracle = msg_to_des_tokens(schema, msg)
+        ser = SerFSM(rom, "hw2hw", frame_phits=1).run(strip_for_ser(oracle))
+        des = DesFSM(rom, "hw2hw").run(ser.wire)
+        assert tok_tuple(des.tokens) == tok_tuple(oracle), msg

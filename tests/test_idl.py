@@ -1,0 +1,71 @@
+"""IDL parsing / validation (paper §III-B)."""
+import pytest
+
+from repro.core import Schema, SchemaError, ClientSchema, all_token_paths
+from repro.core.idl import Array, Bytes, ListT, StructRef, parse_type
+
+
+PAPER_SCHEMA = {
+    "Msg": [["a", ["List", ["Array", ["Struct", "Tuple"]]]], ["b", ["Bytes", 1]]],
+    "Tuple": [["x", ["Bytes", 4]], ["y", ["Bytes", 8]]],
+}
+
+
+def test_parse_paper_example():
+    s = Schema.from_json(PAPER_SCHEMA)
+    assert s.top == "Msg"
+    a_type = dict(s.structs["Msg"])["a"]
+    assert isinstance(a_type, ListT)
+    assert isinstance(a_type.elem, Array)
+    assert isinstance(a_type.elem.elem, StructRef)
+    assert s.max_depth() == 2
+
+
+def test_roundtrip_json():
+    s = Schema.from_json(PAPER_SCHEMA)
+    assert Schema.from_json(s.to_json()).to_json() == s.to_json()
+
+
+@pytest.mark.parametrize("bad", [
+    {},  # empty
+    {"M": [["a", ["Bytes", 0]]]},  # zero width
+    {"M": [["a", ["Bytes", -3]]]},
+    {"M": [["a", ["Struct", "Nope"]]]},  # undefined struct
+    {"M": [["a", ["Bytes", 4]], ["a", ["Bytes", 4]]]},  # dup field
+    {"M": [["a", ["Weird", 4]]]},  # unknown constructor
+])
+def test_rejects_malformed(bad):
+    with pytest.raises(SchemaError):
+        Schema.from_json(bad)
+
+
+def test_rejects_recursive():
+    with pytest.raises(SchemaError):
+        Schema.from_json({"M": [["a", ["Struct", "M"]]]})
+    with pytest.raises(SchemaError):
+        Schema.from_json({
+            "M": [["a", ["Struct", "N"]]],
+            "N": [["b", ["List", ["Struct", "M"]]]],
+        })
+
+
+def test_token_paths_and_client_schema():
+    s = Schema.from_json(PAPER_SCHEMA)
+    paths = set(all_token_paths(s))
+    # the paper's Fig. 7 paths
+    for p in ("a.start", "a.elem.start", "a.elem.elem.x", "a.elem.elem.y",
+              "a.elem.end", "a.end", "b"):
+        assert p in paths, p
+    cs = ClientSchema.from_json({"a.start": 1, "a.elem.elem.x": 3})
+    cs.validate_against(s)
+    assert cs.tag_for("a.start") == 1
+    assert cs.tag_for("b") == -1
+    with pytest.raises(SchemaError):
+        ClientSchema.from_json({"zzz.bogus": 1}).validate_against(s)
+
+
+def test_parse_type_errors():
+    with pytest.raises(SchemaError):
+        parse_type(["Bytes"])
+    with pytest.raises(SchemaError):
+        parse_type(["Struct", 7])

@@ -1,0 +1,153 @@
+"""Launchers: train restart-after-kill, serve wire roundtrip, HLO analyzer."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_train(args, check=True):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = ""  # single device
+    cmd = [sys.executable, "-m", "repro.launch.train"] + args
+    return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=os.path.dirname(SRC), check=check)
+
+
+@pytest.mark.slow
+def test_train_checkpoint_restart_bitwise(tmp_path):
+    """Kill at step 12, resume, final state must equal the uninterrupted run."""
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    common = ["--arch", "xlstm-125m", "--smoke", "--steps", "16",
+              "--batch", "2", "--seq", "32", "--ckpt-every", "4"]
+    # uninterrupted
+    r = _run_train(common + ["--ckpt-dir", d1])
+    assert "done" in r.stdout
+    # interrupted at 12 then resumed
+    r = _run_train(common + ["--ckpt-dir", d2, "--die-at", "12"], check=False)
+    assert r.returncode == 17
+    r = _run_train(common + ["--ckpt-dir", d2, "--resume", "auto"])
+    assert "resumed from step 12" in r.stdout
+    # compare final checkpoints bitwise
+    from repro.checkpoint import load_checkpoint
+    from repro.checkpoint.store import CheckpointManager
+    m1, m2 = CheckpointManager(d1), CheckpointManager(d2)
+    assert m1.latest() == m2.latest() == 16
+    _, t1 = load_checkpoint(m1.path(16))
+    _, t2 = load_checkpoint(m2.path(16))
+    assert set(t1) == set(t2)
+    for k in t1:
+        np.testing.assert_array_equal(t1[k], t2[k], err_msg=k)
+
+
+def test_serve_wire_roundtrip():
+    from repro.launch.serve import (
+        decode_request, decode_response, encode_request, encode_response,
+    )
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9, 10]]
+    wire = encode_request(99, prompts)
+    rid, got = decode_request(wire)
+    assert rid == 99 and got == prompts
+    outs = [[11, 12], [13], []]
+    rwire = encode_response(7, outs)
+    rid, got = decode_response(rwire)
+    assert rid == 7 and got == outs
+
+
+@pytest.mark.slow
+def test_serve_end_to_end_smoke():
+    import dataclasses
+    from repro.configs import get_config, smoke_config
+    from repro.launch.serve import decode_response, encode_request, serve_request
+    from repro.models import init_params
+    cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    wire = encode_request(1, [[5, 6, 7], [9, 10]])
+    resp = serve_request(params, cfg, wire, max_new=4, pad_to=16)
+    rid, outs = decode_response(resp)
+    assert rid == 1
+    assert len(outs) == 2 and all(len(o) == 4 for o in outs)
+    assert all(0 <= t < cfg.vocab for o in outs for t in o)
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+
+def test_analyzer_multiplies_while_trip_counts():
+    from repro.launch.hloanalysis import analyze
+
+    def f_scan(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    def f_unroll(x, w):
+        for _ in range(10):
+            x = jnp.tanh(x @ w)
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    want = 2 * 64 * 128 * 128 * 10
+    for f in (f_scan, f_unroll):
+        rep = analyze(jax.jit(f).lower(x, w).compile().as_text())
+        assert abs(rep.dot_flops - want) / want < 1e-6
+
+
+def test_analyzer_nested_scans():
+    from repro.launch.hloanalysis import analyze
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    rep = analyze(jax.jit(f).lower(x, w).compile().as_text())
+    want = 2 * 32 * 64 * 64 * 15
+    assert abs(rep.dot_flops - want) / want < 1e-6
+
+
+def test_analyzer_collectives_counted():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.hloanalysis import analyze
+    mesh = jax.make_mesh((4,), ("d",), devices=jax.devices()[:4])
+
+    def f(x):
+        return jax.lax.with_sharding_constraint(
+            x.sum(0, keepdims=True), NamedSharding(mesh, P())
+        )
+
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+    jitted = jax.jit(f, in_shardings=NamedSharding(mesh, P("d")))
+    rep = analyze(jitted.lower(x).compile().as_text())
+    assert rep.collective_bytes > 0
+
+
+def test_input_specs_all_cells():
+    """input_specs builds for every (arch x supported shape) without alloc."""
+    from repro.configs import SHAPES, all_archs, get_config, supports_shape
+    from repro.launch.steps import input_specs
+    for arch in all_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, _ = supports_shape(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, (jax.ShapeDtypeStruct,))

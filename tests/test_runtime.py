@@ -1,0 +1,175 @@
+"""Distribution runtime: shardings resolve, framed channels, compression,
+pipeline, end-to-end sharded train step on a small mesh."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_archs, get_config, smoke_config
+from repro.models import init_cache, init_params
+from repro.runtime import (
+    ShardRules, batch_pspec, batch_shardings, cache_shardings,
+    cross_pod_mean_int8, frame_stream, make_framed_sender, param_shardings,
+    unframe_stream,
+)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_param_shardings_resolve_and_place(arch, mesh):
+    cfg = smoke_config(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sh = param_shardings(params, cfg, mesh)
+    placed = jax.device_put(params, sh)  # divisibility errors would raise
+    n_sharded = sum(1 for s in jax.tree.leaves(sh) if s.spec != P())
+    assert n_sharded > 0
+    del placed
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "jamba-1.5-large-398b", "whisper-tiny"])
+def test_cache_shardings_resolve(arch, mesh):
+    cfg = smoke_config(get_config(arch))
+    cache = init_cache(cfg, 4, 32)
+    sh = cache_shardings(cache, cfg, mesh)
+    jax.device_put(cache, sh)
+
+
+def test_batch_pspec_divisibility(mesh):
+    rules = ShardRules()
+    assert batch_pspec(mesh, rules, 8) == P(("pod", "data"))
+    assert batch_pspec(mesh, rules, 2) == P(("pod",))  # 2 % 4 != 0 -> drop data
+    assert batch_pspec(mesh, rules, 3) == P(None)  # prime -> replicate
+
+
+def test_frame_stream_roundtrip():
+    payload = jnp.arange(4096, dtype=jnp.uint32)
+    for nbytes in (0, 10, 100, 4096 * 4):
+        frames, nf = frame_stream(payload, jnp.asarray(nbytes), frame_phits=16)
+        out, nb, ok = unframe_stream(frames)
+        assert bool(ok)
+        assert int(nb) == nbytes
+        words = (nbytes + 3) // 4
+        np.testing.assert_array_equal(np.asarray(out[:words]), np.asarray(payload[:words]))
+        assert np.all(np.asarray(out[words:]) == 0)
+
+
+def test_frame_checksum_detects_corruption():
+    payload = jnp.arange(256, dtype=jnp.uint32)
+    frames, _ = frame_stream(payload, jnp.asarray(1024), frame_phits=16)
+    bad = frames.at[0, 8].add(1)
+    _, _, ok = unframe_stream(bad)
+    assert not bool(ok)
+
+
+def test_framed_channel_ring_exchange(mesh):
+    payload = jnp.arange(2 * 2048, dtype=jnp.uint32).reshape(2, 2048)
+    nbytes = jnp.array([100, 8192], jnp.int32)
+    sender = make_framed_sender(mesh, "pod", frame_phits=32)
+    p_out, nb_out, ok = jax.jit(sender)(payload, nbytes)
+    assert bool(ok.all())
+    assert list(np.asarray(nb_out)) == [8192, 100]
+    np.testing.assert_array_equal(np.asarray(p_out)[0, :2048], np.asarray(payload[1]))
+    np.testing.assert_array_equal(np.asarray(p_out)[1, :25], np.asarray(payload[0, :25]))
+
+
+def test_int8_cross_pod_mean(mesh):
+    g = {"w": jnp.stack([jnp.full((4, 4), 1.0), jnp.full((4, 4), 3.0)])}
+    e = {"w": jnp.zeros((2, 4, 4))}
+
+    def red(g, e):
+        gl = jax.tree.map(lambda x: x[0], g)
+        el = jax.tree.map(lambda x: x[0], e)
+        m, en = cross_pod_mean_int8(gl, el, "pod")
+        return (jax.tree.map(lambda x: x[None], m),
+                jax.tree.map(lambda x: x[None], en))
+
+    f = shard_map(red, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                  out_specs=(P("pod"), P("pod")), check_rep=False)
+    m, en = jax.jit(f)(g, e)
+    np.testing.assert_allclose(np.asarray(m["w"])[0], 2.0, atol=0.05)
+    # error feedback: residual bounded by one quantization step
+    assert np.abs(np.asarray(en["w"])).max() <= 3.0 / 127 + 1e-6
+
+
+def test_error_feedback_converges():
+    """Repeated compression of a constant gradient: mean of dequantized
+    values (with error feedback) converges to the true value."""
+    from repro.runtime.compress import quantize_leaf, dequantize_leaf
+    g = jnp.asarray([[0.3141, -0.0017], [0.9, 2e-4]])
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for i in range(64):
+        q, s = quantize_leaf(g, err)
+        dq = dequantize_leaf(q, s)
+        err = g + err - dq
+        acc = acc + dq
+    np.testing.assert_allclose(np.asarray(acc / 64), np.asarray(g), rtol=2e-2, atol=2e-5)
+
+
+def test_gpipe_matches_reference(mesh):
+    from repro.runtime.pipeline import gpipe_forward
+    k = jax.random.PRNGKey(0)
+    W = jax.random.normal(k, (2, 1, 8, 8)) * 0.5
+    sp = {"w": W}
+
+    def stage_fn(p, x):
+        for i in range(p["w"].shape[0]):
+            x = jnp.tanh(x @ p["w"][i])
+        return x
+
+    x = jax.random.normal(k, (4, 2, 6, 8))
+    pm = jax.make_mesh((2,), ("pod",), devices=jax.devices()[:2])
+    y = gpipe_forward(pm, "pod", stage_fn, sp, x)
+    ref = x
+    for s in range(2):
+        ref = jnp.tanh(ref @ W[s, 0])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+
+def test_sharded_train_step_runs(mesh):
+    """End-to-end pjit train step on the 8-device debug mesh."""
+    from repro.launch.dryrun import lower_cell
+    from repro.configs.base import ShapeConfig
+    cfg = dataclasses.replace(
+        smoke_config(get_config("yi-6b")), n_layers=2, microbatch=2,
+        scan_layers=True,
+    )
+    shape = ShapeConfig("t", 32, 8, "train")
+    lowered, jitted, specs = lower_cell(cfg, shape, mesh)
+    compiled = lowered.compile()
+    assert compiled.memory_analysis().temp_size_in_bytes >= 0
+    # actually execute with real arrays
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    from repro.optim import adamw_init
+    opt = adamw_init(params)
+    batch = {
+        "tokens": jnp.ones((8, 32), jnp.int32),
+        "labels": jnp.ones((8, 32), jnp.int32),
+        "loss_mask": jnp.ones((8, 32), jnp.float32),
+        "segment_ids": jnp.ones((8, 32), jnp.int32),
+        "positions": jnp.tile(jnp.arange(32, dtype=jnp.int32)[None], (8, 1)),
+    }
+    p2, o2, metrics = jitted(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_serve_step_sharded(mesh):
+    from repro.launch.dryrun import lower_cell
+    from repro.configs.base import ShapeConfig
+    cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=2)
+    shape = ShapeConfig("d", 64, 8, "decode")
+    lowered, jitted, specs = lower_cell(cfg, shape, mesh)
+    compiled = lowered.compile()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, 8, 64)
+    toks = jnp.ones((8, 1), jnp.int32)
+    nt, c2 = jitted(params, cache, toks)
+    assert nt.shape == (8, 1)

@@ -1,0 +1,75 @@
+"""Schema tree / ROM compilation (paper §IV-A2)."""
+import numpy as np
+
+from repro.core import (
+    ClientSchema, Schema, build_rom, build_tree, tree_depth,
+    KIND_ARRAY, KIND_BYTES, KIND_END, KIND_LIST,
+)
+
+PAPER_SCHEMA = {
+    "Msg": [["a", ["List", ["Array", ["Struct", "Tuple"]]]], ["b", ["Bytes", 1]]],
+    "Tuple": [["x", ["Bytes", 4]], ["y", ["Bytes", 8]]],
+}
+
+
+def test_tree_matches_paper_fig11():
+    s = Schema.from_json(PAPER_SCHEMA)
+    roots = build_tree(s)
+    # root children: a (List), b (Bytes), END
+    assert [n.kind for n in roots] == [KIND_LIST, KIND_BYTES, KIND_END]
+    a = roots[0]
+    assert len(a.children) == 1 and a.children[0].kind == KIND_ARRAY
+    xy = a.children[0].children
+    assert [n.kind for n in xy] == [KIND_BYTES, KIND_BYTES]
+    assert [n.nbytes for n in xy] == [4, 8]
+    assert tree_depth(roots) == 2
+
+
+def test_struct_inlining():
+    s = Schema.from_json({
+        "M": [["p", ["Struct", "Inner"]], ["q", ["Bytes", 2]]],
+        "Inner": [["u", ["Bytes", 1]], ["v", ["Bytes", 1]]],
+    })
+    roots = build_tree(s)
+    # Inner's fields are inlined: u, v, q, END all siblings
+    assert [n.path for n in roots] == ["p.u", "p.v", "q", ""]
+
+
+def test_rom_layout_siblings_consecutive():
+    s = Schema.from_json(PAPER_SCHEMA)
+    rom = build_rom(s)
+    # entry 0 = a (List), 1 = b, 2 = END, then a's child (Array), then x,y
+    assert list(rom.kind[:3]) == [KIND_LIST, KIND_BYTES, KIND_END]
+    child = int(rom.child[0])
+    assert rom.kind[child] == KIND_ARRAY
+    gc = int(rom.child[child])
+    assert list(rom.kind[gc : gc + 2]) == [KIND_BYTES, KIND_BYTES]
+    assert rom.last[gc + 1] == 1  # y is last child
+    assert rom.stack_depth == 2
+
+
+def test_rom_tags_and_emit_end():
+    s = Schema.from_json(PAPER_SCHEMA)
+    cs = ClientSchema.from_json({
+        "a.start": 1, "a.elem.start": 2, "a.elem.elem.x": 3,
+        "a.elem.elem.y": 4, "a.elem.end": 5, "a.end": 6, "b": 7,
+    })
+    rom = build_rom(s, cs)
+    arr = int(rom.child[0])
+    assert rom.emit_end[arr] == 1  # array-end tagged -> emitted
+    assert rom.tag_end[arr] == 5
+    # untag the array end -> not emitted (paper §III-C1)
+    cs2 = ClientSchema.from_json({"a.elem.elem.x": 3})
+    rom2 = build_rom(s, cs2)
+    assert rom2.emit_end[int(rom2.child[0])] == 0
+    assert rom2.emit_end[0] == 1  # lists ALWAYS emit list-end
+
+
+def test_list_level_annotation():
+    s = Schema.from_json({
+        "M": [["a", ["List", ["List", ["Bytes", 4]]]], ["d", ["Bytes", 4]]],
+    })
+    rom = build_rom(s)
+    assert rom.list_level[0] == 1  # outer list
+    inner = int(rom.child[0])
+    assert rom.list_level[inner] == 2
