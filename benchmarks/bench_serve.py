@@ -1,0 +1,147 @@
+"""Serving throughput: batched message plane vs the seed sequential loop.
+
+Measures, at request-batch sizes {1, 8, 32}:
+
+* **sequential** — the seed's ``serve_request`` loop: per-wire streaming-FSM
+  DES, fresh ROM walk, per-request ``jax.jit`` of prefill/decode;
+* **batched**    — ``serve_requests``: one batched structure pass + one
+  gather per leaf for ALL wires, continuous-batching scheduler with cached
+  jitted steps, bulk SER of the responses.
+
+Also times the wire plane alone (batched DES vs per-message DES) and
+asserts the batched decode is bit-exact against the per-message jnp oracle
+before timing anything.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serve.py
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import Table
+from repro.configs import get_config, smoke_config
+from repro.core import (
+    batch_plans, decode_batch, decode_message, plan_from_wire, stack_wires,
+    wire_to_u8,
+)
+from repro.data.schemas import request_schema
+from repro.launch.serve import (
+    decode_request, decode_request_batch, decode_response, encode_request,
+    serve_request, serve_requests,
+)
+from repro.models import init_params
+
+MAX_NEW = 8
+PAD_TO = 16
+BATCHES = (1, 8, 32)
+
+
+def make_wires(cfg, n, rng):
+    """n single-prompt request wires.  Prompt lengths are 16..23 >= PAD_TO,
+    so both paths truncate/pad to exactly PAD_TO tokens and must produce
+    identical responses (asserted in bench_serving)."""
+    return [
+        encode_request(r, [
+            list(map(int, rng.integers(2, cfg.vocab, 16 + int(rng.integers(0, 8)))))
+        ])
+        for r in range(n)
+    ]
+
+
+def check_decode_bit_exact(wires) -> None:
+    """Batched decode == per-message jnp oracle, bitwise."""
+    schema = request_schema()
+    bp = batch_plans(schema, wires)
+    caps = {p: bp.cap(p) for p in bp.offsets}
+    vals = decode_batch(jnp.asarray(stack_wires(wires)), bp)
+    for i, w in enumerate(wires):
+        ref = decode_message(wire_to_u8(w), plan_from_wire(schema, w, caps=caps))
+        for p, v in vals.items():
+            n = int(bp.counts[p][i])
+            np.testing.assert_array_equal(np.asarray(v[i, :n]), np.asarray(ref[p][:n]))
+
+
+def bench_wire_plane(cfg, rng, n=64) -> Table:
+    t = Table("wire plane (request DES only)", ["path", "wires", "s", "wires/s"])
+    wires = make_wires(cfg, n, rng)
+    check_decode_bit_exact(wires)
+    for name, fn in [
+        ("per-message FSM", lambda: [decode_request(w) for w in wires]),
+        ("batched plan+gather", lambda: decode_request_batch(wires)),
+    ]:
+        fn()  # warmup
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        t.add(name, n, round(dt, 4), round(n / dt, 1))
+    return t
+
+
+def bench_serving(params, cfg, rng, slots=8) -> Table:
+    t = Table(
+        "serving throughput",
+        ["batch", "path", "s", "req/s", "tok/s", "speedup"],
+    )
+    for B in BATCHES:
+        wires = make_wires(cfg, B, rng)
+        t0 = time.perf_counter()
+        seq_resp = [
+            serve_request(params, cfg, w, max_new=MAX_NEW, pad_to=PAD_TO)
+            for w in wires
+        ]
+        dt_seq = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        bat_resp = serve_requests(
+            params, cfg, wires, max_new=MAX_NEW, pad_to=PAD_TO,
+            slots=min(slots, max(B, 1)),
+        )
+        dt_bat = time.perf_counter() - t0
+        n_tok = sum(
+            sum(len(o) for o in decode_response(w)[1]) for w in bat_resp
+        )
+        assert [decode_response(w) for w in bat_resp] == [
+            decode_response(w) for w in seq_resp
+        ], "batched plane diverged from the sequential path"
+        t.add(B, "sequential", round(dt_seq, 2), round(B / dt_seq, 2),
+              round(n_tok / dt_seq, 1), 1.0)
+        t.add(B, "batched", round(dt_bat, 2), round(B / dt_bat, 2),
+              round(n_tok / dt_bat, 1), round(dt_seq / dt_bat, 2))
+    return t
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        smoke_config(get_config(args.arch)), n_layers=args.layers
+    )
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    print(bench_wire_plane(cfg, rng).show())
+    print()
+    tbl = bench_serving(params, cfg, rng, slots=args.slots)
+    print(tbl.show())
+    by_batch = {r[0]: r for r in tbl.rows if r[1] == "batched"}
+    speedup32 = by_batch[32][5]
+    print(f"\nbatched vs sequential at batch 32: {speedup32}x "
+          f"({'PASS' if speedup32 >= 3.0 else 'FAIL'} >= 3x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,14 +55,18 @@ from .framing import (
     FrameWriter,
 )
 from .vectorized import (
+    BatchedDecodePlan,
     DecodePlan,
+    batch_plans,
     build_plan,
+    decode_batch,
     decode_leaf,
     decode_message,
     encode_leaf,
     encode_message,
     lanes_to_int,
     plan_from_wire,
+    stack_wires,
     wire_to_u8,
 )
 

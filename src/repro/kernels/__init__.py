@@ -5,16 +5,20 @@ explicit BlockSpec VMEM tiling; ``ops`` holds the jitted wrappers;
 ``ref`` the pure-jnp oracles the tests assert against.
 """
 from .ops import (
+    batched_runs_from_plan,
+    decode_batch_kernel,
     decode_gather,
     decode_message_kernel,
     decode_run,
     encode_run,
     runs_from_plan,
     wire_to_u32,
+    wires_to_u32,
     write_headers,
 )
 
 __all__ = [
-    "decode_gather", "decode_message_kernel", "decode_run", "encode_run",
-    "runs_from_plan", "wire_to_u32", "write_headers",
+    "batched_runs_from_plan", "decode_batch_kernel", "decode_gather",
+    "decode_message_kernel", "decode_run", "encode_run", "runs_from_plan",
+    "wire_to_u32", "wires_to_u32", "write_headers",
 ]

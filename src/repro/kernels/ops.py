@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.idl import Schema
-from ..core.vectorized import DecodePlan
+from ..core.vectorized import BatchedDecodePlan, DecodePlan, stack_wires
 from .frame_pack import pack_run, stamp_headers
 from .phit_unpack import unpack_gather, unpack_run
 
@@ -68,6 +68,84 @@ def runs_from_plan(plan: DecodePlan, path: str) -> Optional[Tuple[int, int]]:
     if np.all(strides == strides[0]) and strides[0] > 0:
         return int(offs[0]), int(strides[0])
     return None
+
+
+def wires_to_u32(wires: List[bytes]) -> Tuple[jnp.ndarray, int]:
+    """Stack N wires into one flat u32 lane buffer.
+
+    Rows are padded to a common 4-byte-aligned length L so per-message byte
+    offsets become flat offsets by adding ``m * L``.  Returns (lanes, L).
+    """
+    L = -(-max([len(w) for w in wires] + [1]) // 4) * 4
+    mat = stack_wires(wires, pad_to=L)
+    return jnp.asarray(mat.reshape(-1).view(np.uint32)), L
+
+
+def batched_runs_from_plan(
+    bplan: BatchedDecodePlan, path: str, row_bytes: int
+) -> Optional[Tuple[int, int]]:
+    """If `path` is one uniform run in EVERY message at the same (base,
+    stride) relative to its row, the flat batch is itself a uniform run of
+    ``N * cap`` instances (stride between rows = row_bytes).  This is the
+    fixed-layout fast path (e.g. batch_schema rows): one ``unpack_run``
+    covers the whole serving batch."""
+    n = bplan.counts[path]
+    cap = bplan.cap(path)
+    if not np.all(n == cap) or cap == 0:
+        return None  # ragged: padding rows would break the run
+    offs = np.asarray(bplan.offsets[path])
+    if cap == 1:
+        # one instance per row: consecutive flat instances sit exactly one
+        # row apart, so the row itself is the stride
+        stride = row_bytes
+    else:
+        strides = np.diff(offs, axis=1)
+        if not (np.all(strides == strides[0, 0]) and strides[0, 0] > 0):
+            return None
+        stride = int(strides[0, 0])
+    if not np.all(offs[:, 0] == offs[0, 0]):
+        return None
+    # flat offset of (msg m, inst k) is base + m*row_bytes + k*stride; this
+    # equals base + (m*cap + k)*stride — one big run — iff cap*stride tiles
+    # the row exactly.
+    if cap * stride != row_bytes:
+        return None
+    return int(offs[0, 0]), stride
+
+
+def decode_batch_kernel(
+    wires_u32: jnp.ndarray,  # flat lanes from wires_to_u32
+    row_bytes: int,
+    bplan: BatchedDecodePlan,
+    paths: Optional[List[str]] = None,
+    interpret: bool = True,
+) -> Dict[str, jnp.ndarray]:
+    """Batched DES payload pass on the Pallas kernels.
+
+    ONE ``unpack_run``/``unpack_gather`` call per leaf path decodes that leaf
+    for every message in the batch (this is the kernel twin of
+    ``repro.core.vectorized.decode_batch``).  Returns
+    path -> uint32[N, cap, nlanes].
+    """
+    N = bplan.n_messages
+    base = (np.arange(N, dtype=np.int64) * row_bytes)[:, None]
+    out = {}
+    for p in paths or bplan.offsets.keys():
+        nbytes = bplan.nbytes[p]
+        cap = bplan.cap(p)
+        run = batched_runs_from_plan(bplan, p, row_bytes)
+        if run is not None:
+            b, stride = run
+            lanes = decode_run(
+                wires_u32, b, stride, N * cap, nbytes, interpret=interpret
+            )
+        else:
+            offs = jnp.asarray(
+                (bplan.offsets[p] + base).reshape(-1).astype(np.int32)
+            )
+            lanes = decode_gather(wires_u32, offs, nbytes, interpret=interpret)
+        out[p] = lanes.reshape(N, cap, lanes.shape[-1])
+    return out
 
 
 def decode_message_kernel(

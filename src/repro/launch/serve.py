@@ -1,20 +1,39 @@
-"""Serving driver: HGum request/response wire + batched prefill/decode.
+"""Serving driver: the batched HGum message plane + continuous batching.
 
 Requests arrive as HGum-serialized wires (``request_schema`` — a List of
-prompts with unknown lengths, the paper's List case).  The host DES
-reconstructs prompts, pads them into a batch, runs prefill then greedy
-decode, and serializes the response in the HW->SW direction (counts after
-elements; the host parses from the end — paper §IV-B).
+prompts with unknown lengths, the paper's List case).  Two request paths:
+
+* **Batched plane (default)** — ``serve_requests`` takes MANY request wires
+  at once.  One *batched structure pass* (``core.vectorized.batch_plans``)
+  walks the schema a single time with per-message cursor columns and yields
+  a ``BatchedDecodePlan`` with a leading message axis; one gather per leaf
+  path (``decode_batch``) then decodes every payload of every message.  The
+  reconstructed prompts feed ``runtime.scheduler.ContinuousBatcher`` — a
+  fixed-slot KV cache with per-step admit/evict and *cached* jitted
+  prefill/decode steps — and all responses are serialized back through the
+  HW->SW SerFSM in bulk (one schema ROM shared across the batch, counts
+  after elements so the host parses from the end — paper §IV-B).
+* **Sequential path (seed baseline)** — ``serve_request`` answers one wire
+  at a time with a fresh ROM walk, a streaming-FSM DES, and per-request
+  ``jax.jit``.  Kept verbatim so ``benchmarks/bench_serve.py`` measures the
+  batched plane against it.
+
+Scheduler knobs (see ``runtime.scheduler.SchedulerConfig``):
+
+* ``slots``      — concurrent sequences / KV-cache rows (decode batch width)
+* ``prompt_cap`` — static prompt pad length (``--pad-to``)
+* ``max_new``    — greedy tokens per sequence
+* ``admit_cap``  — prefill width per scheduler tick (default: ``slots``)
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-      --n-prompts 4 --max-new 16
+      --n-requests 8 --n-prompts 4 --max-new 16 --slots 8
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,15 +43,20 @@ from ..configs import get_config, smoke_config
 from ..core import (
     DesFSM,
     SerFSM,
+    batch_plans,
     build_rom,
+    decode_batch,
     des_hw_to_sw,
+    lanes_to_int,
     msg_to_des_tokens,
     ser_sw_to_hw,
+    stack_wires,
     strip_for_ser,
     tokens_to_msg,
 )
 from ..data.schemas import request_schema, response_schema
 from ..models import init_cache, init_params
+from ..runtime.scheduler import ContinuousBatcher, SchedulerConfig
 from .steps import make_prefill_step, make_serve_step
 
 
@@ -43,7 +67,7 @@ def encode_request(req_id: int, prompts: List[List[int]]) -> bytes:
 
 
 def decode_request(wire: bytes) -> Tuple[int, List[List[int]]]:
-    """Hardware-side DES of the request (streaming FSM engine)."""
+    """Hardware-side DES of ONE request (streaming FSM engine — seed path)."""
     schema = request_schema()
     rom = build_rom(schema)
     res = DesFSM(rom, "sw2hw").run(wire)
@@ -51,13 +75,51 @@ def decode_request(wire: bytes) -> Tuple[int, List[List[int]]]:
     return msg["req_id"], [p["tokens"] for p in msg["prompts"]]
 
 
+def decode_request_batch(wires: List[bytes]) -> List[Tuple[int, List[List[int]]]]:
+    """Batched DES of N request wires: one schema walk + one gather per leaf.
+
+    The per-prompt lengths are read from the decoded *count fields* of the
+    inner token lists (container paths decode like u32 leaves), so splitting
+    the flat token column back into prompts needs no second walk.
+    """
+    schema = request_schema()
+    # only these three leaves are consumed; skipping the outer 'prompts'
+    # count leaf drops one gather from the request hot path
+    paths = ["req_id", "prompts.elem.tokens", "prompts.elem.tokens.elem"]
+    bplan = batch_plans(schema, wires, record_paths=paths)
+    vals = decode_batch(jnp.asarray(stack_wires(wires)), bplan)
+    rid_lanes = np.asarray(vals["req_id"])  # (N, 1, 2)
+    len_lanes = np.asarray(vals["prompts.elem.tokens"])  # (N, capP, 1)
+    tok_lanes = np.asarray(vals["prompts.elem.tokens.elem"])  # (N, capT, 1)
+    out = []
+    for m in range(len(wires)):
+        rid = int(lanes_to_int(rid_lanes[m], 8)[0])
+        n_prompts = int(bplan.counts["prompts.elem.tokens"][m])
+        n_toks = int(bplan.counts["prompts.elem.tokens.elem"][m])
+        lens = len_lanes[m, :n_prompts, 0].astype(np.int64)
+        toks = tok_lanes[m, :n_toks, 0]
+        splits = np.split(toks, np.cumsum(lens)[:-1]) if n_prompts else []
+        out.append((rid, [list(map(int, p)) for p in splits]))
+    return out
+
+
 def encode_response(req_id: int, outputs: List[List[int]]) -> bytes:
     """Hardware-side SER (HW->SW: counts after elements)."""
+    return encode_response_batch([(req_id, outputs)])[0]
+
+
+def encode_response_batch(
+    responses: List[Tuple[int, List[List[int]]]]
+) -> List[bytes]:
+    """Bulk HW->SW SER: one schema ROM shared by every response wire."""
     schema = response_schema()
     rom = build_rom(schema)
-    msg = {"req_id": req_id, "outputs": [{"tokens": o} for o in outputs]}
-    toks = strip_for_ser(msg_to_des_tokens(schema, msg))
-    return SerFSM(rom, "hw2sw").run(toks).wire
+    wires = []
+    for req_id, outputs in responses:
+        msg = {"req_id": req_id, "outputs": [{"tokens": o} for o in outputs]}
+        toks = strip_for_ser(msg_to_des_tokens(schema, msg))
+        wires.append(SerFSM(rom, "hw2sw").run(toks).wire)
+    return wires
 
 
 def decode_response(wire: bytes) -> Tuple[int, List[List[int]]]:
@@ -66,10 +128,18 @@ def decode_response(wire: bytes) -> Tuple[int, List[List[int]]]:
     return msg["req_id"], [o["tokens"] for o in msg["outputs"]]
 
 
+# ---------------------------------------------------------------------------
+# Sequential path — the seed's one-wire-at-a-time loop (benchmark baseline)
+# ---------------------------------------------------------------------------
+
+
 def serve_request(
     params, cfg, wire: bytes, max_new: int = 16, pad_to: int = 64
 ) -> bytes:
+    """Answer ONE request wire (seed baseline: per-request ROM walk + jit)."""
     req_id, prompts = decode_request(wire)
+    if not prompts:  # zero-prompt request: nothing to generate
+        return encode_response(req_id, [])
     B = len(prompts)
     max_len = max(len(p) for p in prompts)
     S = min(pad_to, max(8, max_len))
@@ -95,12 +165,59 @@ def serve_request(
     return encode_response(req_id, outputs)
 
 
+# ---------------------------------------------------------------------------
+# Batched plane — many wires in, many wires out
+# ---------------------------------------------------------------------------
+
+
+def serve_requests(
+    params,
+    cfg,
+    wires: List[bytes],
+    max_new: int = 16,
+    pad_to: int = 64,
+    slots: int = 8,
+    admit_cap: Optional[int] = None,
+) -> List[bytes]:
+    """Answer N request wires through the batched message plane.
+
+    Batched structure pass -> one gather per leaf -> continuous-batching
+    generate -> bulk SER.  Responses come back in request order; a request
+    with zero prompts yields an empty-outputs response wire.
+
+    Padding semantics: every prompt is padded/truncated to the static
+    ``pad_to`` (fixed KV slots need one shape), whereas the seed's
+    ``serve_request`` picks ``min(pad_to, max(8, longest prompt))`` per
+    request — so the two paths emit identical tokens exactly when prompts
+    are >= ``pad_to`` long (both truncate to ``pad_to``).
+    """
+    reqs = decode_request_batch(wires)
+    sched = SchedulerConfig(
+        slots=slots, prompt_cap=pad_to, max_new=max_new, admit_cap=admit_cap
+    )
+    batcher = ContinuousBatcher(params, cfg, sched)
+    for m, (_, prompts) in enumerate(reqs):
+        for i, p in enumerate(prompts):
+            batcher.submit((m, i), p)
+    outs = batcher.run()
+    responses = [
+        (rid, [outs[(m, i)] for i in range(len(prompts))])
+        for m, (rid, prompts) in enumerate(reqs)
+    ]
+    return encode_response_batch(responses)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--n-requests", type=int, default=4)
     ap.add_argument("--n-prompts", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pad-to", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--sequential", action="store_true",
+                    help="use the seed one-wire-at-a-time path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -110,20 +227,38 @@ def main() -> None:
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
     rng = np.random.default_rng(args.seed)
-    prompts = [
-        list(map(int, rng.integers(2, cfg.vocab, rng.integers(4, 24))))
-        for _ in range(args.n_prompts)
-    ]
-    wire = encode_request(7, prompts)
-    print(f"[serve] request wire: {len(wire)} bytes, {len(prompts)} prompts")
+    wires = []
+    for r in range(args.n_requests):
+        prompts = [
+            list(map(int, rng.integers(2, cfg.vocab, rng.integers(4, 24))))
+            for _ in range(args.n_prompts)
+        ]
+        wires.append(encode_request(r, prompts))
+    total_b = sum(len(w) for w in wires)
+    print(f"[serve] {len(wires)} request wires, {total_b} bytes total")
     t0 = time.time()
-    resp_wire = serve_request(params, cfg, wire, max_new=args.max_new)
+    if args.sequential:
+        resp_wires = [
+            serve_request(params, cfg, w, max_new=args.max_new,
+                          pad_to=args.pad_to)
+            for w in wires
+        ]
+    else:
+        resp_wires = serve_requests(
+            params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
+            slots=args.slots,
+        )
     dt = time.time() - t0
-    rid, outs = decode_response(resp_wire)
-    print(f"[serve] req {rid}: generated {sum(len(o) for o in outs)} tokens "
-          f"in {dt:.2f}s; response wire {len(resp_wire)} bytes")
+    n_tok = 0
+    for rw in resp_wires:
+        rid, outs = decode_response(rw)
+        n_tok += sum(len(o) for o in outs)
+    mode = "sequential" if args.sequential else f"batched(slots={args.slots})"
+    print(f"[serve] {mode}: {len(wires)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({len(wires)/dt:.2f} req/s, {n_tok/dt:.1f} tok/s)")
+    rid, outs = decode_response(resp_wires[0])
     for i, o in enumerate(outs[:2]):
-        print(f"  out[{i}][:8] = {o[:8]}")
+        print(f"  req {rid} out[{i}][:8] = {o[:8]}")
 
 
 if __name__ == "__main__":

@@ -72,6 +72,37 @@ def make_serve_step(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# cached jitted serving steps (the batched message plane re-enters these
+# every scheduler tick; re-jitting per request — the seed's serve_request
+# behaviour — costs more than the decode itself)
+# ---------------------------------------------------------------------------
+
+_SERVE_STEP_CACHE: Dict[Tuple, Tuple] = {}
+
+
+def cached_serve_steps(cfg: ModelConfig, cache_len: int):
+    """(jitted prefill_step, jitted serve_step) memoized on (cfg, cache_len).
+
+    ModelConfig is a frozen dataclass, so it keys the cache directly; jit
+    then dedupes further by input shapes.  The decode step donates its cache
+    argument — the scheduler rebinds the cache every tick, so the input
+    buffer is dead after the call and donating it avoids holding two full
+    slot caches at once.
+    """
+    key = (cfg, cache_len)
+    if key not in _SERVE_STEP_CACHE:
+        _SERVE_STEP_CACHE[key] = (
+            jax.jit(make_prefill_step(cfg, cache_len=cache_len)),
+            jax.jit(make_serve_step(cfg), donate_argnums=(1,)),
+        )
+    return _SERVE_STEP_CACHE[key]
+
+
+def clear_serve_step_cache() -> None:
+    _SERVE_STEP_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
 # input specs (ShapeDtypeStruct stand-ins; no allocation — dry-run food)
 # ---------------------------------------------------------------------------
 

@@ -1,4 +1,5 @@
-"""Distributed runtime: sharding rules, framed channels, compression, pipeline."""
+"""Distributed runtime: sharding rules, framed channels, compression,
+pipeline, and the continuous-batching serve scheduler."""
 from .sharding import (
     ShardRules,
     batch_pspec,
@@ -23,8 +24,10 @@ from .compress import (
     new_error,
 )
 from .pipeline import gpipe_forward, split_stages, stack_stage_params
+from .scheduler import ContinuousBatcher, SchedulerConfig
 
 __all__ = [
+    "ContinuousBatcher", "SchedulerConfig",
     "ShardRules", "batch_pspec", "batch_shardings", "cache_shardings",
     "param_pspec", "param_shardings", "replicated",
     "FRAME_PHITS", "frame_stream", "make_framed_sender", "pod_ring_exchange",

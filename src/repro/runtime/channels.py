@@ -100,7 +100,9 @@ def pod_ring_exchange(
     """ppermute a framed stream one hop around `axis_name` (call under
     shard_map).  The framed stream is self-describing, so the receiver can
     decode without out-of-band length metadata — the paper's point."""
-    n = jax.lax.axis_size(axis_name)
+    # NB: jax.lax.axis_size does not exist in the pinned JAX; psum of ones
+    # over the axis is the portable way to recover its size inside shard_map.
+    n = int(jax.lax.psum(1, axis_name))
     perm = [(i, (i + shift) % n) for i in range(n)]
     return jax.lax.ppermute(frames, axis_name, perm)
 

@@ -1,0 +1,206 @@
+"""Continuous-batching serve scheduler: fixed KV slots, admit/evict per step.
+
+The seed's ``serve_request`` answered one HGum wire at a time: fresh ROM
+walk, per-request ``jax.jit`` of prefill/decode, one generate loop per
+request.  This module is the compute half of the batched message plane
+(ISSUE 1): a :class:`ContinuousBatcher` owns
+
+* a **slot cache** — one KV cache of ``slots`` rows (``init_cache(cfg,
+  slots, prompt_cap + max_new)``) that lives across requests;
+* **cached jitted steps** — ``launch.steps.cached_serve_steps`` memoizes the
+  jitted prefill/decode on (cfg, cache_len), so admission never re-traces;
+* an **admit/evict loop** — every :meth:`step` first admits pending
+  sequences into free slots (one fixed-shape prefill of ``admit_cap`` rows,
+  scattered into the slot cache with an OOB-dropping ``.at[].set``), then
+  runs ONE batched decode step for all live slots and evicts the finished
+  ones.
+
+Sequences are plain token lists; the wire plane (``launch.serve``) sits on
+either side of this class — batched HGum DES in front, bulk SER behind.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+# NB: launch.steps / models are imported lazily inside ContinuousBatcher —
+# models itself pulls in repro.runtime (actshard), so a module-level import
+# here would be circular.
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Knobs of the serve loop (documented in launch/serve.py's docstring)."""
+
+    slots: int = 8  # fixed KV-cache rows = max concurrent sequences
+    prompt_cap: int = 32  # prompts are padded/truncated to this length
+    max_new: int = 16  # greedy tokens generated per sequence
+    admit_cap: Optional[int] = None  # prefill width per tick (default: slots)
+
+    def __post_init__(self) -> None:
+        if self.slots < 1 or self.prompt_cap < 1 or self.max_new < 1:
+            raise ValueError(
+                f"slots/prompt_cap/max_new must be >= 1, got "
+                f"{self.slots}/{self.prompt_cap}/{self.max_new}"
+            )
+        if self.admit_cap is not None and self.admit_cap < 1:
+            raise ValueError(f"admit_cap must be >= 1 or None, got {self.admit_cap}")
+
+    @property
+    def admit_width(self) -> int:
+        return self.admit_cap or self.slots
+
+    @property
+    def cache_len(self) -> int:
+        return self.prompt_cap + self.max_new
+
+
+@dataclass
+class _Sequence:
+    seq_id: Hashable
+    tokens: List[int]
+    out: List[int] = field(default_factory=list)
+    remaining: int = 0
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_rows(cache: PyTree, cur_tok: jnp.ndarray, new_cache: PyTree,
+                  new_tok: jnp.ndarray, slot_ids: jnp.ndarray):
+    """Insert prefilled rows into their slots.
+
+    ``slot_ids`` is padded with an out-of-range id for unused admit rows, so
+    ``mode="drop"`` discards them and the call keeps one static shape.
+    """
+    cache = jax.tree.map(
+        lambda c, n: c.at[slot_ids].set(n.astype(c.dtype), mode="drop"),
+        cache, new_cache,
+    )
+    cur_tok = cur_tok.at[slot_ids].set(new_tok, mode="drop")
+    return cache, cur_tok
+
+
+class ContinuousBatcher:
+    """Admit/decode/evict loop over a fixed-slot KV cache."""
+
+    def __init__(self, params: PyTree, cfg: ModelConfig, sched: SchedulerConfig):
+        from ..launch.steps import cached_serve_steps
+
+        self.params = params
+        self.cfg = cfg
+        self.sched = sched
+        self.prefill_step, self.decode_step = cached_serve_steps(
+            cfg, cache_len=sched.cache_len
+        )
+        # The slot cache must be row-compatible with what prefill emits —
+        # families can grow it beyond prompt_cap + max_new (e.g. vlm KV
+        # includes the vision prefix) — so allocate it from prefill's
+        # eval_shape with the batch dim widened to `slots`.
+        _, cache_spec = jax.eval_shape(
+            self.prefill_step, params, self._batch_specs(sched.admit_width)
+        )
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros((sched.slots,) + s.shape[1:], s.dtype), cache_spec
+        )
+        self.cur_tok = jnp.zeros((sched.slots, 1), jnp.int32)
+        # static non-token model inputs (vision/audio placeholders) are
+        # allocated once, not per admit tick
+        self._extra_inputs = {
+            k: jnp.zeros(s.shape, s.dtype)
+            for k, s in self._batch_specs(sched.admit_width).items()
+            if k != "tokens"
+        }
+        self.active: List[Optional[_Sequence]] = [None] * sched.slots
+        self.pending: Deque[_Sequence] = deque()
+        self.done: Dict[Hashable, List[int]] = {}
+        self.steps_run = 0
+
+    def _batch_specs(self, A: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        S = self.sched.prompt_cap
+        specs = {"tokens": jax.ShapeDtypeStruct((A, S), jnp.int32)}
+        if self.cfg.family == "vlm":
+            specs["vision"] = jax.ShapeDtypeStruct(
+                (A, self.cfg.vision_tokens, self.cfg.vision_dim), jnp.float32
+            )
+        if self.cfg.family == "encdec":
+            specs["audio"] = jax.ShapeDtypeStruct(
+                (A, self.cfg.enc_seq, self.cfg.d_model), jnp.float32
+            )
+        return specs
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, seq_id: Hashable, tokens: List[int]) -> None:
+        self.pending.append(_Sequence(seq_id, list(tokens)))
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.active)
+
+    # -- scheduler tick ----------------------------------------------------
+
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self.active) if s is None]
+        if not free or not self.pending:
+            return
+        A = self.sched.admit_width
+        take = min(len(free), A, len(self.pending))
+        seqs = [self.pending.popleft() for _ in range(take)]
+        S = self.sched.prompt_cap
+        toks = np.zeros((A, S), np.int32)
+        for j, seq in enumerate(seqs):
+            toks[j, : min(len(seq.tokens), S)] = seq.tokens[:S]
+        batch = dict(self._extra_inputs)
+        batch["tokens"] = jnp.asarray(toks)
+        next_tok, new_cache = self.prefill_step(self.params, batch)
+        # unused admit rows -> OOB slot id, dropped by the scatter
+        slot_ids = np.full(A, self.sched.slots, np.int32)
+        slot_ids[:take] = free[:take]
+        self.cache, self.cur_tok = _scatter_rows(
+            self.cache, self.cur_tok, new_cache, next_tok, jnp.asarray(slot_ids)
+        )
+        first = np.asarray(next_tok)[:take, 0]
+        for j, seq in enumerate(seqs):
+            seq.out.append(int(first[j]))
+            seq.remaining = self.sched.max_new - 1
+            self.active[free[j]] = seq
+        self._evict()
+
+    def _evict(self) -> None:
+        for i, seq in enumerate(self.active):
+            if seq is not None and seq.remaining <= 0:
+                self.done[seq.seq_id] = seq.out
+                self.active[i] = None
+
+    def step(self) -> None:
+        """One scheduler tick: admit into free slots, then one batched
+        decode step for every live slot."""
+        self._admit()
+        if self.n_active == 0:
+            return
+        self.cur_tok, self.cache = self.decode_step(
+            self.params, self.cache, self.cur_tok
+        )
+        self.steps_run += 1
+        toks = np.asarray(self.cur_tok)[:, 0]  # one host sync per tick
+        for i, seq in enumerate(self.active):
+            if seq is not None:
+                seq.out.append(int(toks[i]))
+                seq.remaining -= 1
+        self._evict()
+
+    def run(self) -> Dict[Hashable, List[int]]:
+        """Drain the queue; returns seq_id -> generated tokens."""
+        while self.pending or self.n_active:
+            self.step()
+        out, self.done = self.done, {}
+        return out
