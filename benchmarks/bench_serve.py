@@ -21,6 +21,7 @@ import dataclasses
 import sys
 import time
 from pathlib import Path
+from typing import List
 
 sys.path.insert(0, str(Path(__file__).parent))
 
@@ -87,12 +88,12 @@ def bench_wire_plane(cfg, rng, n=64) -> Table:
     return t
 
 
-def bench_serving(params, cfg, rng, slots=8) -> Table:
+def bench_serving(params, cfg, rng, slots=8, batches=BATCHES) -> Table:
     t = Table(
         "serving throughput",
         ["batch", "path", "s", "req/s", "tok/s", "speedup"],
     )
-    for B in BATCHES:
+    for B in batches:
         wires = make_wires(cfg, B, rng)
         t0 = time.perf_counter()
         seq_resp = [
@@ -117,6 +118,18 @@ def bench_serving(params, cfg, rng, slots=8) -> Table:
         t.add(B, "batched", round(dt_bat, 2), round(B / dt_bat, 2),
               round(n_tok / dt_bat, 1), round(dt_seq / dt_bat, 2))
     return t
+
+
+def run() -> List[Table]:
+    """Aggregator entry (``python -m benchmarks.run``): the wire plane plus
+    a trimmed serving sweep (batch 32 is left to the standalone CLI)."""
+    cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    return [
+        bench_wire_plane(cfg, rng),
+        bench_serving(params, cfg, rng, batches=(1, 8)),
+    ]
 
 
 def main() -> None:

@@ -12,13 +12,15 @@ import time
 
 def main() -> None:
     from . import bench_fig14, bench_fe_case_study, bench_schema_complexity
-    from . import bench_pipeline
+    from . import bench_fabric, bench_pipeline, bench_serve
 
     mods = [
         ("fig14 (throughput vs optimum)", bench_fig14),
         ("schema complexity (area/freq analog)", bench_schema_complexity),
         ("FE case study", bench_fe_case_study),
         ("framework pipeline + channel", bench_pipeline),
+        ("serving plane (batched vs sequential)", bench_serve),
+        ("routed fabric (hops + flow control)", bench_fabric),
     ]
     tables = []
     for name, mod in mods:

@@ -1,24 +1,25 @@
-"""Framed MoE dispatch demo: expert token groups as HGum Lists.
+"""Framed MoE dispatch demo: expert token groups as routed HGum Lists.
 
 MoE dispatch is HGum's List-framing in disguise (DESIGN.md §5): each expert
 receives a variable-length list of tokens, packed into fixed-capacity
 frames (the (E, C, d) buffer = one frame per expert with a count header).
-This demo runs the sort-based dispatch, prints per-expert frame fill, and
-moves the framed buffers across a 2-member mesh axis with the HGum framed
-channel (headers + checksums + empty-frame terminators).
+This demo runs the sort-based dispatch, prints per-expert frame fill, then
+performs the expert **all-to-all over the routed message fabric**
+(``repro.fabric``): every rank sends each expert's token list to the rank
+that owns that expert as a routed framed List — CRC32 per frame, multi-hop
+delivery, credit flow control — replacing the seed's hand-rolled
+single-hop neighbour exchange.
 
-Run:  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/moe_dispatch.py
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.fabric import Fabric, FabricConfig
 from repro.models.ffn import init_moe_ffn, moe_capacity, moe_ffn
-from repro.runtime import frame_stream, make_framed_sender, unframe_stream
 
 
 def main():
@@ -36,25 +37,54 @@ def main():
 
     # expert load = list length per expert (the HGum frame count header)
     logits = x.reshape(-1, cfg.d_model) @ p["router"]
-    top = jax.lax.top_k(jax.nn.softmax(logits), cfg.moe_topk)[1].reshape(-1)
-    counts = np.bincount(np.asarray(top), minlength=cfg.moe_experts)
+    top = np.asarray(
+        jax.lax.top_k(jax.nn.softmax(logits), cfg.moe_topk)[1].reshape(-1)
+    )
+    counts = np.bincount(top, minlength=cfg.moe_experts)
     for e, c in enumerate(counts):
         bar = "#" * int(30 * c / counts.max())
         print(f"  expert {e}: {c:4d} tokens (fill {c/C:5.1%}) {bar}")
 
-    # ship one expert buffer across a 2-member axis as HGum frames
-    if len(jax.devices()) >= 2:
-        mesh = jax.make_mesh((2,), ("ep",), devices=jax.devices()[:2])
-        buf = jnp.arange(2 * 4096, dtype=jnp.uint32).reshape(2, 4096)
-        nbytes = jnp.asarray([counts[0] * cfg.d_model * 4,
-                              counts[1] * cfg.d_model * 4], jnp.int32)
-        nbytes = jnp.minimum(nbytes, 4096 * 4)
-        sender = make_framed_sender(mesh, "ep", frame_phits=64)
-        out, nb, ok = jax.jit(sender)(buf, nbytes)
-        print(f"\nframed exchange over 'ep' axis: ok={bool(ok.all())}, "
-              f"lengths {list(np.asarray(nbytes))} -> {list(np.asarray(nb))}")
-    else:
-        print("(single device: skip the framed exchange half)")
+    # ------------------------------------------------------------------
+    # expert all-to-all over the routed fabric: rank r holds 1/R of the
+    # token stream; expert e lives on rank e % R; every (rank, expert)
+    # token-id list crosses the fabric as one routed framed List.
+    # ------------------------------------------------------------------
+    R = min(len(jax.devices()), cfg.moe_experts)
+    if R < 2:
+        print("(single device: skip the fabric all-to-all half)")
+        return
+    fabric = Fabric(n_ranks=R, config=FabricConfig(frame_phits=8))
+    boxes = [fabric.mailbox(r) for r in range(R)]
+    owner = lambda e: e % R
+    token_ids = np.arange(top.shape[0], dtype=np.uint32)
+    my_slice = np.array_split(np.arange(top.shape[0]), R)
+
+    sent = {}
+    for r in range(R):
+        for e in range(cfg.moe_experts):
+            ids = token_ids[my_slice[r]][top[my_slice[r]] == e]
+            sent[(r, e)] = ids
+            # routed framed List: the expert id rides as the ListLevel
+            boxes[r].send(owner(e), ids.tobytes(), list_level=e + 1)
+    fabric.exchange()
+
+    print(f"\nexpert all-to-all over the fabric: {fabric.n_ranks} ranks, "
+          f"{fabric.frames_routed} frames routed, "
+          f"crc_ok={fabric.last_crc_ok}")
+    ok = True
+    for d in range(R):
+        got = boxes[d].recv()
+        per_expert = {}
+        for dl in got:
+            assert dl.ok, f"corrupt frames from rank {dl.src}"
+            e = dl.list_level - 1  # the expert id rode as the ListLevel
+            ids = np.frombuffer(dl.wire, np.uint32)
+            ok &= owner(e) == d and np.array_equal(sent[(dl.src, e)], ids)
+            per_expert[e] = per_expert.get(e, 0) + len(ids)
+        loads = {e: n for e, n in sorted(per_expert.items()) if n}
+        print(f"  rank {d}: {len(got)} routed lists, expert loads {loads}")
+    print(f"fabric all-to-all bit-exact: {ok}")
 
 
 if __name__ == "__main__":

@@ -15,8 +15,17 @@ must produce token-identical responses (asserted below); with shorter
 prompts the seed path picks a per-request pad length while the fixed-slot
 scheduler always pads to PAD_TO, so outputs may legitimately differ.
 
-Run:  PYTHONPATH=src python examples/serve_requests.py
+With ``--sharded`` the same burst additionally goes through the routed
+message fabric (``repro.fabric``): rank 0 (ingress) routes each request
+wire to a serving shard, every shard answers through its own
+continuous-batching plane, and the response wires ride the multi-hop
+return path back — asserted token-identical to the local batched plane.
+
+Run:  PYTHONPATH=src python examples/serve_requests.py [--sharded]
+      (use XLA_FLAGS=--xla_force_host_platform_device_count=8 to get
+      a multi-rank fabric on CPU)
 """
+import argparse
 import dataclasses
 import time
 
@@ -26,6 +35,7 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.launch.serve import (
     decode_response, encode_request, serve_request, serve_requests,
+    serve_requests_sharded,
 )
 from repro.models import init_params
 
@@ -34,6 +44,12 @@ PAD_TO = 16
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded", action="store_true",
+                    help="also route the burst through the message fabric "
+                         "to per-shard batchers and assert token-identity")
+    ap.add_argument("--n-shards", type=int, default=None)
+    args = ap.parse_args()
     cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=4)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -64,6 +80,28 @@ def main():
             print(f"   out[{i}] = {o}")
     print(f"[batched]    {len(wires)} requests ({total_b} B) -> {n_tok} tokens "
           f"in {dt_batched:.2f}s ({n_tok / dt_batched:.1f} tok/s)")
+
+    # --- sharded plane over the message fabric -----------------------
+    if args.sharded:
+        from repro.launch.serve import default_serve_fabric
+
+        fabric = default_serve_fabric(args.n_shards)
+        if fabric is None:
+            print("[sharded]    skipped: needs >= 2 devices (set "
+                  "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        else:
+            t0 = time.time()
+            shard_wires = serve_requests_sharded(
+                params, cfg, wires, max_new=MAX_NEW, pad_to=PAD_TO, slots=8,
+                fabric=fabric,
+            )
+            dt_shard = time.time() - t0
+            assert shard_wires == resp_wires, \
+                "sharded plane diverged from the batched plane"
+            print(f"[sharded]    same burst over the fabric "
+                  f"({fabric.n_ranks - 1} shards, "
+                  f"{fabric.frames_routed} frames), token-identical, "
+                  f"in {dt_shard:.2f}s ({n_tok / dt_shard:.1f} tok/s)")
 
     # --- seed sequential path, same burst ----------------------------
     t0 = time.time()

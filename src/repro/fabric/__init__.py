@@ -1,0 +1,46 @@
+"""Routed message fabric: multi-hop framed transport between mesh ranks.
+
+The HGum paper frames Lists so neither side of a HW-to-HW link needs to
+buffer a whole message (§IV-C); this package generalizes that link into a
+*network*: frames carry a ``(src, dst, seq)`` route word, a :class:`Router`
+delivers them across arbitrary hop counts by composing ``ppermute`` steps
+(dimension-ordered on 2D meshes) under credit-based flow control, and a
+:class:`Mailbox` gives whole-message ``send(dst, wire)`` / ``recv()`` with
+CRC32 verification and terminator-delimited reassembly.
+
+Layers (each importable on its own):
+
+* ``frames``  — wire format: CRC32, route words, frame/unframe (shared with
+  ``runtime.channels``);
+* ``router``  — device-side multi-hop delivery (shard_map + ppermute scan);
+* ``mailbox`` — host-side message API over the router.
+"""
+from .frames import (
+    FRAME_PHITS,
+    HDR_WORDS,
+    MAX_RANKS,
+    PHIT_WORDS,
+    SEQ_MOD,
+    crc32_words,
+    frame_capacity,
+    frame_parts,
+    frame_parts_batch,
+    frame_stream,
+    pack_route,
+    route_dst,
+    route_seq,
+    route_src,
+    unframe_stream,
+    unpack_route,
+    verify_frames,
+)
+from .mailbox import Delivery, Fabric, Mailbox
+from .router import FabricConfig, Router
+
+__all__ = [
+    "FRAME_PHITS", "HDR_WORDS", "MAX_RANKS", "PHIT_WORDS", "SEQ_MOD",
+    "crc32_words", "frame_capacity", "frame_parts", "frame_parts_batch",
+    "frame_stream", "pack_route", "route_dst", "route_seq", "route_src",
+    "unframe_stream", "unpack_route", "verify_frames",
+    "Delivery", "Fabric", "Mailbox", "FabricConfig", "Router",
+]

@@ -1,0 +1,248 @@
+"""Wire-level framing core shared by the fabric and the point-to-point
+channels (``runtime.channels``).
+
+The paper's §IV-C HW-to-HW frame header carries ``(size, ListLevel)``.  Two
+extensions live here so every framed path uses ONE implementation:
+
+* **CRC32** — a real CRC-32 (IEEE 802.3, the zlib polynomial) replaces the
+  seed's additive checksum.  The additive sum is blind to byte reorders
+  (``a+b == b+a``); CRC32 is not.  Implemented slicing-by-4: one 256-entry
+  table per input byte lane, one scan step per u32 word, so a whole frame
+  checksums in ``frame_words`` sequential steps instead of ``4x`` that.
+* **route word** — the fourth header word becomes ``(src, dst, seq)`` packed
+  ``src:u8 | dst:u8 | seq:u16`` so a frame is self-routing: any hop can read
+  its destination without out-of-band state, and the receiver can reorder
+  interleaved frames per source by ``seq``.  ``seq`` increments per frame
+  (not per message) and wraps at 2**16.
+
+Frame layout (u32 words)::
+
+    [ size | list_level | crc32 | route ] [ payload ... frame_words ]
+
+The CRC is computed over ``size | list_level | route | payload`` (every
+word of the frame except the CRC slot itself), so header corruption — a
+flipped size, level, or destination byte — is as detectable as payload
+corruption.  ``size`` is the true payload byte count of the frame; a size-0
+frame is the end-of-list terminator (paper rule) and doubles as the
+end-of-message marker for fabric sends.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: paper §V: 128-bit phits; frame = up to 500 phits (Altera 512-deep BRAM).
+PHIT_WORDS = 4  # 16 B in u32 lanes
+FRAME_PHITS = 500
+HDR_WORDS = 4  # size, list_level, crc32, route -> one phit
+
+#: header word indices
+HDR_SIZE, HDR_LEVEL, HDR_CRC, HDR_ROUTE = 0, 1, 2, 3
+
+
+def _crc32_tables() -> np.ndarray:
+    """Slicing-by-4 CRC-32 tables, (4, 256) uint32.
+
+    ``T[0]`` is the classic byte-at-a-time table; ``T[k]`` advances a byte
+    through ``k`` extra zero bytes, so one u32 word folds in a single step:
+    ``crc' = T3[b0^crc] ^ T2[b1^(crc>>8)] ^ T1[b2^(crc>>16)] ^ T0[b3^(crc>>24)]``.
+    """
+    poly = np.uint32(0xEDB88320)
+    t0 = np.zeros(256, np.uint64)
+    for i in range(256):
+        c = np.uint64(i)
+        for _ in range(8):
+            c = (c >> np.uint64(1)) ^ (np.uint64(poly) if c & np.uint64(1) else np.uint64(0))
+        t0[i] = c
+    tables = np.zeros((4, 256), np.uint64)
+    tables[0] = t0
+    for k in range(1, 4):
+        tables[k] = t0[tables[k - 1] & np.uint64(0xFF)] ^ (tables[k - 1] >> np.uint64(8))
+    return tables.astype(np.uint32)
+
+
+_CRC_TABLES = _crc32_tables()
+
+
+def crc32_words(words: jnp.ndarray) -> jnp.ndarray:
+    """CRC-32 (zlib-compatible) of the little-endian bytes of a u32 vector.
+
+    Matches ``zlib.crc32(words.tobytes())`` for ``words`` viewed as LE u32.
+    One scan step per word (slicing-by-4).
+    """
+    t = jnp.asarray(_CRC_TABLES)  # (4, 256)
+
+    def step(crc, w):
+        b0 = (w ^ crc) & 0xFF
+        b1 = ((w >> 8) ^ (crc >> 8)) & 0xFF
+        b2 = ((w >> 16) ^ (crc >> 16)) & 0xFF
+        b3 = ((w >> 24) ^ (crc >> 24)) & 0xFF
+        crc = t[3, b0] ^ t[2, b1] ^ t[1, b2] ^ t[0, b3]
+        return crc, None
+
+    crc, _ = jax.lax.scan(step, jnp.uint32(0xFFFFFFFF), words.astype(jnp.uint32))
+    return crc ^ jnp.uint32(0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# route word
+# ---------------------------------------------------------------------------
+
+MAX_RANKS = 256  # src/dst are u8 lanes in the route word
+SEQ_MOD = 1 << 16
+
+
+def pack_route(src, dst, seq) -> jnp.ndarray:
+    """(src, dst, seq) -> u32 route word: ``src:u8 | dst:u8 | seq:u16``."""
+    src = jnp.asarray(src, jnp.uint32) & 0xFF
+    dst = jnp.asarray(dst, jnp.uint32) & 0xFF
+    seq = jnp.asarray(seq, jnp.uint32) & 0xFFFF
+    return (src << 24) | (dst << 16) | seq
+
+
+def unpack_route(word: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    word = jnp.asarray(word, jnp.uint32)
+    return (word >> 24) & 0xFF, (word >> 16) & 0xFF, word & 0xFFFF
+
+
+def route_src(frames: jnp.ndarray) -> jnp.ndarray:
+    """(…, width) frames -> (…,) src rank (int32)."""
+    return ((frames[..., HDR_ROUTE] >> 24) & 0xFF).astype(jnp.int32)
+
+
+def route_dst(frames: jnp.ndarray) -> jnp.ndarray:
+    return ((frames[..., HDR_ROUTE] >> 16) & 0xFF).astype(jnp.int32)
+
+
+def route_seq(frames: jnp.ndarray) -> jnp.ndarray:
+    return (frames[..., HDR_ROUTE] & 0xFFFF).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# framing / unframing (pure jnp, static frame capacity)
+# ---------------------------------------------------------------------------
+
+
+def frame_parts(
+    payload_u32: jnp.ndarray,  # (W,) u32 — serialized list data (padded cap)
+    nbytes: jnp.ndarray,  # true byte length (traced)
+    list_level: int = 1,
+    frame_phits: int = FRAME_PHITS,
+    route: Optional[Tuple] = None,  # (src, dst, seq0) scalars, or None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Structure half of framing: (headers (F, HDR_WORDS), masked payload
+    (F, frame_words), n_frames).  ``frame_stream`` concatenates the two; the
+    Pallas ``pack_frames_batch`` kernel assembles them on-device instead.
+    """
+    frame_words = frame_phits * PHIT_WORDS
+    W = payload_u32.shape[0]
+    F = -(-W // frame_words) + 1  # + terminator
+    pad = F * frame_words - W
+    data = jnp.pad(payload_u32, (0, pad)).reshape(F, frame_words)
+    word_len = (nbytes + 3) // 4
+    start = jnp.arange(F, dtype=jnp.int32) * frame_words
+    remaining = jnp.maximum(word_len - start, 0)
+    words_in = jnp.minimum(remaining, frame_words)  # (F,)
+    bytes_in = jnp.minimum(jnp.maximum(nbytes - start * 4, 0), frame_words * 4)
+    # zero tail garbage inside each frame
+    col = jnp.arange(frame_words, dtype=jnp.int32)[None, :]
+    data = jnp.where(col < words_in[:, None], data, 0)
+    if route is None:
+        route_words = jnp.zeros((F,), jnp.uint32)
+    else:
+        src, dst, seq0 = route
+        seq = (jnp.asarray(seq0, jnp.uint32) + jnp.arange(F, dtype=jnp.uint32)) % SEQ_MOD
+        route_words = pack_route(src, dst, seq)
+    sizes = bytes_in.astype(jnp.uint32)
+    levels = jnp.full((F,), list_level, jnp.uint32)
+    # CRC covers the OTHER header words too (size, level, route) — a flipped
+    # size or dst byte must be as detectable as a flipped payload byte
+    crc = jax.vmap(crc32_words)(_crc_input(sizes, levels, route_words, data))
+    hdr = jnp.stack([sizes, levels, crc, route_words], axis=1)
+    n_frames = jnp.sum(words_in > 0) + 1  # + empty terminator
+    return hdr, data, n_frames
+
+
+def _crc_input(sizes, levels, routes, data) -> jnp.ndarray:
+    """Words the frame CRC is computed over: size | level | route | payload."""
+    return jnp.concatenate(
+        [sizes[:, None], levels[:, None], routes[:, None], data], axis=1
+    ).astype(jnp.uint32)
+
+
+def frame_stream(
+    payload_u32: jnp.ndarray,
+    nbytes: jnp.ndarray,
+    list_level: int = 1,
+    frame_phits: int = FRAME_PHITS,
+    route: Optional[Tuple] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cut a byte stream into frames.
+
+    Returns (frames, n_frames): frames (F, HDR_WORDS + frame_words) u32 with
+    per-frame headers; F is the static capacity bound incl. the empty
+    end-of-list terminator frame.  With ``route`` set, every frame carries a
+    ``(src, dst, seq0 + i)`` route word (terminator included) so the fabric
+    can deliver and reorder it.
+    """
+    hdr, data, n_frames = frame_parts(
+        payload_u32, nbytes, list_level, frame_phits, route
+    )
+    return jnp.concatenate([hdr, data], axis=1), n_frames
+
+
+def frame_parts_batch(
+    payloads_u32: jnp.ndarray,  # (B, Wcap) u32
+    nbytes: jnp.ndarray,  # (B,) int32
+    routes: jnp.ndarray,  # (B, 3) int32 — (src, dst, seq0) per stream
+    list_level: int = 1,
+    frame_phits: int = FRAME_PHITS,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Batched ``frame_parts`` for multi-destination sends: one vectorized
+    structure pass over B streams.  Returns (headers (B, F, HDR_WORDS),
+    payload (B, F, frame_words), n_frames (B,))."""
+    fn = lambda p, nb, r: frame_parts(
+        p, nb, list_level, frame_phits, route=(r[0], r[1], r[2])
+    )
+    return jax.vmap(fn)(payloads_u32, jnp.asarray(nbytes), jnp.asarray(routes))
+
+
+def verify_frames(frames: jnp.ndarray) -> jnp.ndarray:
+    """Per-frame CRC check (headers included): (…, F, width) -> (…, F) bool."""
+    flat = frames.reshape(-1, frames.shape[-1])
+    got = jax.vmap(crc32_words)(
+        _crc_input(flat[:, HDR_SIZE], flat[:, HDR_LEVEL], flat[:, HDR_ROUTE],
+                   flat[:, HDR_WORDS:])
+    )
+    ok = got == flat[:, HDR_CRC]
+    return ok.reshape(frames.shape[:-1])
+
+
+def unframe_stream(
+    frames: jnp.ndarray, verify: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Frames -> (payload_u32 (W,), nbytes, ok).  Zeroed past the true end."""
+    F, width = frames.shape
+    hdr = frames[:, :HDR_WORDS]
+    data = frames[:, HDR_WORDS:]
+    bytes_in = hdr[:, HDR_SIZE].astype(jnp.int32)
+    ok = jnp.array(True)
+    if verify:
+        ok = jnp.all(verify_frames(frames))
+    # terminator = first frame with size 0; ignore frames after it
+    is_end = bytes_in == 0
+    first_end = jnp.argmax(is_end)  # frames are contiguous by construction
+    live = jnp.arange(F) < first_end
+    nbytes = jnp.sum(jnp.where(live, bytes_in, 0))
+    payload = jnp.where(live[:, None], data, 0).reshape(-1)
+    return payload, nbytes, ok
+
+
+def frame_capacity(wire_bytes: int, frame_phits: int) -> int:
+    """Frames emitted for a wire of ``wire_bytes`` (incl. the terminator)."""
+    frame_words = frame_phits * PHIT_WORDS
+    words = -(-wire_bytes // 4)
+    return -(-words // frame_words) + 1  # 0 bytes -> terminator only

@@ -7,9 +7,11 @@ explicit BlockSpec VMEM tiling; ``ops`` holds the jitted wrappers;
 from .ops import (
     batched_runs_from_plan,
     decode_batch_kernel,
+    decode_frames_batch,
     decode_gather,
     decode_message_kernel,
     decode_run,
+    encode_frames_batch,
     encode_run,
     runs_from_plan,
     wire_to_u32,
@@ -18,7 +20,8 @@ from .ops import (
 )
 
 __all__ = [
-    "batched_runs_from_plan", "decode_batch_kernel", "decode_gather",
-    "decode_message_kernel", "decode_run", "encode_run", "runs_from_plan",
+    "batched_runs_from_plan", "decode_batch_kernel", "decode_frames_batch",
+    "decode_gather", "decode_message_kernel", "decode_run",
+    "encode_frames_batch", "encode_run", "runs_from_plan",
     "wire_to_u32", "wires_to_u32", "write_headers",
 ]

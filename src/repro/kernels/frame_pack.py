@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..fabric.frames import HDR_WORDS
 from .phit_unpack import BLOCK, _lane_mask
 
 
@@ -76,6 +77,79 @@ def _header_kernel(wire_ref, hdr_ref, out_ref, *, n_headers: int):
         return 0
 
     jax.lax.fori_loop(0, n_headers, body, 0)
+
+
+def _assemble_kernel(hdr_ref, pay_ref, out_ref):
+    # one (stream, frame) tile per grid step: header phit + payload words
+    out_ref[...] = jnp.concatenate([hdr_ref[...], pay_ref[...]], axis=-1)
+
+
+def pack_frames_batch(
+    headers: jnp.ndarray,  # (B, F, HDR_WORDS) u32 — incl. crc + route words
+    payloads: jnp.ndarray,  # (B, F, frame_words) u32 — pre-masked
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Assemble B framed streams (multi-destination send) in one call.
+
+    The structure half (sizes, CRC32, route words, tail masking) comes from
+    ``fabric.frames.frame_parts_batch``; this kernel is the payload half —
+    one VMEM tile per (stream, frame) writes the wire-layout frame.  Output
+    is (B, F, HDR_WORDS + frame_words), bit-identical to a vmapped
+    ``fabric.frames.frame_stream``.
+    """
+    B, F, frame_words = payloads.shape
+    width = HDR_WORDS + frame_words
+    return pl.pallas_call(
+        _assemble_kernel,
+        grid=(B, F),
+        in_specs=[
+            pl.BlockSpec((1, 1, HDR_WORDS), lambda b, f: (b, f, 0)),
+            pl.BlockSpec((1, 1, frame_words), lambda b, f: (b, f, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, width), lambda b, f: (b, f, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, F, width), jnp.uint32),
+        interpret=interpret,
+    )(headers.astype(jnp.uint32), payloads.astype(jnp.uint32))
+
+
+def _split_kernel(fr_ref, hdr_ref, pay_ref):
+    fr = fr_ref[...]
+    hdr_ref[...] = fr[:, :HDR_WORDS]
+    pay_ref[...] = fr[:, HDR_WORDS:]
+
+
+def unpack_frames_batch(
+    frames: jnp.ndarray,  # (N, HDR_WORDS + frame_words) u32
+    *,
+    block: int = 8,
+    interpret: bool = True,
+) -> tuple:
+    """Split a batch of received frames into (headers, payloads).
+
+    The RX-side twin of ``pack_frames_batch``: (N, width) delivered frames
+    -> headers (N, HDR_WORDS) and payload words (N, frame_words), one row
+    block per grid step.
+    """
+    N, width = frames.shape
+    frame_words = width - HDR_WORDS
+    cap = -(-max(N, 1) // block) * block
+    fr = jnp.pad(frames.astype(jnp.uint32), ((0, cap - N), (0, 0)))
+    hdr, pay = pl.pallas_call(
+        _split_kernel,
+        grid=(cap // block,),
+        in_specs=[pl.BlockSpec((block, width), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((block, HDR_WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((block, frame_words), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((cap, HDR_WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((cap, frame_words), jnp.uint32),
+        ),
+        interpret=interpret,
+    )(fr)
+    return hdr[:N], pay[:N]
 
 
 def stamp_headers(

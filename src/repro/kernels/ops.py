@@ -17,7 +17,8 @@ import numpy as np
 
 from ..core.idl import Schema
 from ..core.vectorized import BatchedDecodePlan, DecodePlan, stack_wires
-from .frame_pack import pack_run, stamp_headers
+from ..fabric.frames import frame_parts_batch
+from .frame_pack import pack_frames_batch, pack_run, stamp_headers, unpack_frames_batch
 from .phit_unpack import unpack_gather, unpack_run
 
 
@@ -49,6 +50,33 @@ def encode_run(tokens, stride: int, nbytes: int, interpret: bool = True):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def write_headers(wire_u32, headers, interpret: bool = True):
     return stamp_headers(wire_u32, headers, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("list_level", "frame_phits", "interpret"))
+def encode_frames_batch(
+    payloads_u32,  # (B, Wcap) u32 — one row per send, zero-padded
+    nbytes,  # (B,) int32 true byte lengths
+    routes,  # (B, 3) int32 (src, dst, seq0) per stream
+    list_level: int = 1,
+    frame_phits: int = 16,
+    interpret: bool = True,
+):
+    """Multi-destination SER: B wires -> B routed framed streams.
+
+    One vectorized structure pass (headers: sizes, CRC32, route words) plus
+    one Pallas assembly pass.  Returns (frames (B, F, width), n_frames (B,)).
+    """
+    hdr, data, n_frames = frame_parts_batch(
+        payloads_u32, nbytes, routes, list_level=list_level,
+        frame_phits=frame_phits,
+    )
+    return pack_frames_batch(hdr, data, interpret=interpret), n_frames
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_frames_batch(frames_u32, interpret: bool = True):
+    """RX split of delivered frames: (N, width) -> (headers, payloads)."""
+    return unpack_frames_batch(frames_u32, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -207,6 +207,108 @@ def serve_requests(
     return encode_response_batch(responses)
 
 
+# ---------------------------------------------------------------------------
+# Sharded plane — requests routed over the message fabric to per-shard
+# batchers (ISSUE 2); composes the batched plane with repro.fabric
+# ---------------------------------------------------------------------------
+
+
+def default_serve_fabric(n_shards: Optional[int] = None):
+    """The fabric ``serve_requests_sharded`` builds when none is passed:
+    rank 0 ingress plus up to 7 serving shards on the available devices.
+    Returns None when fewer than 2 ranks fit (no shard to route to)."""
+    from ..fabric import Fabric, FabricConfig
+
+    n_devices = len(jax.devices())
+    n_ranks = (n_shards + 1) if n_shards else min(n_devices, 8)
+    if n_ranks > n_devices:
+        raise ValueError(
+            f"n_shards={n_shards} needs {n_ranks} devices (shards + ingress) "
+            f"but only {n_devices} are visible — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count or lower n_shards"
+        )
+    if n_ranks < 2:
+        return None
+    return Fabric(n_ranks=n_ranks, config=FabricConfig(frame_phits=16))
+
+
+def serve_requests_sharded(
+    params,
+    cfg,
+    wires: List[bytes],
+    max_new: int = 16,
+    pad_to: int = 64,
+    slots: int = 8,
+    admit_cap: Optional[int] = None,
+    n_shards: Optional[int] = None,
+    fabric=None,
+) -> List[bytes]:
+    """Answer N request wires across fabric-connected serving shards.
+
+    Rank 0 is the *ingress*: it routes each request wire over the message
+    fabric (``repro.fabric``) to one of the serving shards (ranks 1..R-1,
+    round-robin), every shard answers its share through the batched plane
+    (``serve_requests`` — batched DES, ContinuousBatcher, bulk SER), and the
+    response wires ride the fabric back to the ingress, which restores
+    request order.  Requests and responses cross the links as routed framed
+    Lists with CRC32 per frame; responses from shard ``s`` take the
+    multi-hop return path (``R - s`` ring hops).
+
+    Token-identical to ``serve_requests`` on the same wires: both pad every
+    prompt to the static ``pad_to``, and rows decode independently, so shard
+    placement cannot change the greedy outputs.
+
+    Falls back to the local batched plane when the fabric would have fewer
+    than 2 ranks (no shard to route to).
+    """
+    if fabric is None:
+        fabric = default_serve_fabric(n_shards)
+    if fabric is None or fabric.n_ranks < 2:
+        return serve_requests(
+            params, cfg, wires, max_new=max_new, pad_to=pad_to,
+            slots=slots, admit_cap=admit_cap,
+        )
+    shards = list(range(1, fabric.n_ranks))
+    ingress = fabric.mailbox(0)
+    place = lambda i: shards[i % len(shards)]
+
+    # ingress -> shards: route the raw request wires
+    for i, w in enumerate(wires):
+        ingress.send(place(i), w)
+    fabric.exchange()
+
+    # each shard answers its share through the batched plane
+    for s in shards:
+        box = fabric.mailbox(s)
+        arrived = box.recv()
+        if not arrived:
+            continue
+        bad = [d.src for d in arrived if not d.ok]
+        if bad:
+            raise RuntimeError(f"shard {s}: corrupt request frames from {bad}")
+        resp = serve_requests(
+            params, cfg, [d.wire for d in arrived], max_new=max_new,
+            pad_to=pad_to, slots=slots, admit_cap=admit_cap,
+        )
+        for rw in resp:
+            box.send(0, rw)
+    fabric.exchange()
+
+    # ingress: responses arrive per-shard in FIFO order; undo round-robin
+    per_shard: Dict[int, List[bytes]] = {}
+    for d in ingress.recv():
+        if not d.ok:
+            raise RuntimeError(f"ingress: corrupt response frames from {d.src}")
+        per_shard.setdefault(d.src, []).append(d.wire)
+    out: List[bytes] = []
+    cursor = {s: 0 for s in shards}
+    for i in range(len(wires)):
+        s = place(i)
+        out.append(per_shard[s][cursor[s]])
+        cursor[s] += 1
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -218,6 +320,11 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--sequential", action="store_true",
                     help="use the seed one-wire-at-a-time path")
+    ap.add_argument("--sharded", action="store_true",
+                    help="route requests over the message fabric to "
+                         "per-shard batchers (ranks 1..N serve, rank 0 ingress)")
+    ap.add_argument("--n-shards", type=int, default=None,
+                    help="serving shards for --sharded (default: devices-1)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -243,6 +350,11 @@ def main() -> None:
                           pad_to=args.pad_to)
             for w in wires
         ]
+    elif args.sharded:
+        resp_wires = serve_requests_sharded(
+            params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
+            slots=args.slots, n_shards=args.n_shards,
+        )
     else:
         resp_wires = serve_requests(
             params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
@@ -253,7 +365,9 @@ def main() -> None:
     for rw in resp_wires:
         rid, outs = decode_response(rw)
         n_tok += sum(len(o) for o in outs)
-    mode = "sequential" if args.sequential else f"batched(slots={args.slots})"
+    mode = ("sequential" if args.sequential
+            else f"sharded(slots={args.slots})" if args.sharded
+            else f"batched(slots={args.slots})")
     print(f"[serve] {mode}: {len(wires)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({len(wires)/dt:.2f} req/s, {n_tok/dt:.1f} tok/s)")
     rid, outs = decode_response(resp_wires[0])

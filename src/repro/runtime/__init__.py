@@ -11,6 +11,7 @@ from .sharding import (
 )
 from .channels import (
     FRAME_PHITS,
+    crc32_words,
     frame_stream,
     make_framed_sender,
     pod_ring_exchange,
@@ -30,7 +31,8 @@ __all__ = [
     "ContinuousBatcher", "SchedulerConfig",
     "ShardRules", "batch_pspec", "batch_shardings", "cache_shardings",
     "param_pspec", "param_shardings", "replicated",
-    "FRAME_PHITS", "frame_stream", "make_framed_sender", "pod_ring_exchange",
+    "FRAME_PHITS", "crc32_words", "frame_stream", "make_framed_sender",
+    "pod_ring_exchange",
     "unframe_stream", "compress_tree", "cross_pod_mean_int8",
     "decompress_tree", "init_error", "new_error",
     "gpipe_forward", "split_stages", "stack_stage_params",

@@ -4,89 +4,36 @@ A *framed channel* moves a variable-length byte stream (a List in HGum
 terms) between mesh neighbours as fixed-size frames with ``(size,
 ListLevel)`` headers — the paper's §IV-C protocol verbatim, carried by
 ``jax.lax.ppermute`` over the ICI instead of an FPGA link.  An empty frame
-terminates the list; a trailing CRC32-like checksum word (additive, cheap
-on-device) extends the header for fault detection.
+terminates the list; a real CRC32 word (IEEE 802.3, zlib-compatible —
+see ``repro.fabric.frames``) extends the header for fault detection.
 
-``frame_stream`` / ``unframe_stream`` are pure jnp (shard_map-friendly,
-static frame count = capacity bound); ``pod_ring_exchange`` wires a framed
-stream around a mesh axis.
+The framing/checksum core is SHARED with the routed fabric
+(``repro.fabric``): this module keeps the seed's single-hop API
+(``frame_stream`` / ``unframe_stream`` / ``pod_ring_exchange``) as the
+point-to-point special case, re-exported from one implementation so the
+wire format cannot drift between the neighbour channel and the multi-hop
+router.  For arbitrary-rank delivery use ``repro.fabric.Fabric``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-#: paper §V: 128-bit phits; frame = up to 500 phits (Altera 512-deep BRAM).
-PHIT_WORDS = 4  # 16 B in u32 lanes
-FRAME_PHITS = 500
-HDR_WORDS = 4  # size, list_level, checksum, reserved -> one phit
+# One wire format, one implementation: the fabric owns framing + CRC32.
+from ..fabric.frames import (  # noqa: F401  (re-exported public API)
+    FRAME_PHITS,
+    HDR_WORDS,
+    PHIT_WORDS,
+    crc32_words,
+    frame_stream,
+    unframe_stream,
+)
 
-
-def _checksum(x: jnp.ndarray) -> jnp.ndarray:
-    """Additive 32-bit checksum (device-cheap stand-in for CRC32)."""
-    return jnp.sum(x.astype(jnp.uint32), dtype=jnp.uint32)
-
-
-def frame_stream(
-    payload_u32: jnp.ndarray,  # (W,) u32 — serialized list data (padded cap)
-    nbytes: jnp.ndarray,  # true byte length (traced)
-    list_level: int = 1,
-    frame_phits: int = FRAME_PHITS,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Cut a byte stream into frames.
-
-    Returns (frames, n_frames): frames (F, HDR_WORDS + frame_words) u32 with
-    per-frame headers; F is the static capacity bound incl. the empty
-    end-of-list terminator frame.
-    """
-    frame_words = frame_phits * PHIT_WORDS
-    W = payload_u32.shape[0]
-    F = -(-W // frame_words) + 1  # + terminator
-    pad = F * frame_words - W
-    data = jnp.pad(payload_u32, (0, pad)).reshape(F, frame_words)
-    word_len = (nbytes + 3) // 4
-    start = jnp.arange(F, dtype=jnp.int32) * frame_words
-    remaining = jnp.maximum(word_len - start, 0)
-    words_in = jnp.minimum(remaining, frame_words)  # (F,)
-    bytes_in = jnp.minimum(jnp.maximum(nbytes - start * 4, 0), frame_words * 4)
-    # zero tail garbage inside each frame
-    col = jnp.arange(frame_words, dtype=jnp.int32)[None, :]
-    data = jnp.where(col < words_in[:, None], data, 0)
-    hdr = jnp.stack(
-        [
-            bytes_in.astype(jnp.uint32),
-            jnp.full((F,), list_level, jnp.uint32),
-            jax.vmap(_checksum)(data),
-            jnp.zeros((F,), jnp.uint32),
-        ],
-        axis=1,
-    )
-    n_frames = jnp.sum(words_in > 0) + 1  # + empty terminator
-    return jnp.concatenate([hdr, data], axis=1), n_frames
-
-
-def unframe_stream(
-    frames: jnp.ndarray, verify: bool = True
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Frames -> (payload_u32 (W,), nbytes, ok).  Zeroed past the true end."""
-    F, width = frames.shape
-    hdr = frames[:, :HDR_WORDS]
-    data = frames[:, HDR_WORDS:]
-    bytes_in = hdr[:, 0].astype(jnp.int32)
-    ok = jnp.array(True)
-    if verify:
-        ok = jnp.all(jax.vmap(_checksum)(data) == hdr[:, 2])
-    # terminator = first frame with size 0; ignore frames after it
-    is_end = bytes_in == 0
-    first_end = jnp.argmax(is_end)  # frames are contiguous by construction
-    live = jnp.arange(F) < first_end
-    nbytes = jnp.sum(jnp.where(live, bytes_in, 0))
-    payload = jnp.where(live[:, None], data, 0).reshape(-1)
-    return payload, nbytes, ok
+__all__ = [
+    "FRAME_PHITS", "HDR_WORDS", "PHIT_WORDS", "crc32_words",
+    "frame_stream", "unframe_stream", "pod_ring_exchange",
+    "make_framed_sender",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -95,8 +42,8 @@ def unframe_stream(
 
 
 def pod_ring_exchange(
-    frames: jnp.ndarray, axis_name: str, shift: int = 1
-) -> jnp.ndarray:
+    frames: jax.Array, axis_name: str, shift: int = 1
+) -> jax.Array:
     """ppermute a framed stream one hop around `axis_name` (call under
     shard_map).  The framed stream is self-describing, so the receiver can
     decode without out-of-band length metadata — the paper's point."""
