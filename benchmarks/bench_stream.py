@@ -1,0 +1,208 @@
+"""Streaming message plane: time-to-first-token, overlap, and QoS fairness.
+
+Three measurements on the 8 simulated host devices:
+
+* **TTFT vs whole-response** — the same request burst served three ways on
+  a fabric where every request is pinned >= 2 hops from the ingress:
+  whole-response ``serve_requests_sharded`` (ingress sees nothing until the
+  full response wires ride back) vs ``serve_requests_streaming`` with the
+  async overlap pipeline off and on.  Time-to-first-token is the wall
+  clock until the first ``on_token`` callback; the streamed paths must
+  also be byte-identical to the local batched plane.
+* **overlap on/off** — tokens/s of the streamed path with the synchronous
+  tick vs the double-buffered ``exchange_async`` pipeline (fabric hops
+  hiding behind decode steps).
+* **QoS fairness sweep** — a saturating tenant and a light tenant share
+  the 1 -> 0 multi-hop path; the table reports the router scan step at
+  which the light tenant's stream completes under FIFO credits and under
+  weighted round-robin credit classes of increasing light-tenant weight.
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python benchmarks/bench_stream.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+from pathlib import Path
+from typing import List
+
+sys.path.insert(0, str(Path(__file__).parent))
+
+import jax
+import numpy as np
+
+from common import Table, time_call
+from repro.fabric import Fabric, FabricConfig
+
+MAX_NEW = 8
+PAD_TO = 8
+N_REQUESTS = 4
+
+
+def _setup(n_layers: int = 2):
+    from repro.configs import get_config, smoke_config
+    from repro.launch.serve import encode_request
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(
+        smoke_config(get_config("yi-6b")), n_layers=n_layers
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    wires = [
+        encode_request(r, [
+            list(map(int, rng.integers(2, cfg.vocab, 8)))
+            for _ in range(2)
+        ])
+        for r in range(N_REQUESTS)
+    ]
+    return params, cfg, wires
+
+
+def bench_ttft(max_new: int = 48) -> Table:
+    from repro.launch.serve import (
+        serve_requests, serve_requests_sharded, serve_requests_streaming,
+    )
+
+    t = Table("stream: time-to-first-token vs whole-response (>= 2 hops)", [
+        "mode", "hops_out", "hops_back", "ttft_s", "total_s", "tok/s",
+        "ttft_speedup",
+    ])
+    # generation long enough that the whole-response wait (ticks x decode)
+    # dwarfs the streamed plane's constant first-tick latency — the regime
+    # streaming exists for
+    params, cfg, wires = _setup()
+    fabric = Fabric(n_ranks=4, config=FabricConfig(frame_phits=16, credits=4))
+    shard = 2  # 2 hops out, 2 hops back on the 4-ring: >= 2 each way
+    placement = [shard] * len(wires)
+    hops_out = fabric.router.hops(0, shard)
+    hops_back = fabric.router.hops(shard, 0)
+    kw = dict(max_new=max_new, pad_to=PAD_TO, slots=8, fabric=fabric,
+              placement=placement)
+    baseline = serve_requests(
+        params, cfg, wires, max_new=max_new, pad_to=PAD_TO, slots=8
+    )
+    n_tok = N_REQUESTS * 2 * max_new
+
+    def run_whole():
+        t0 = time.perf_counter()
+        out = serve_requests_sharded(params, cfg, wires, **kw)
+        dt = time.perf_counter() - t0
+        assert out == baseline
+        return dt, dt  # first token is only visible with the full response
+
+    def run_streamed(overlap):
+        first = []
+        t0 = time.perf_counter()
+        out = serve_requests_streaming(
+            params, cfg, wires, overlap=overlap,
+            on_token=lambda m, j, s, tok:
+                first.append(time.perf_counter() - t0) if not first else None,
+            **kw,
+        )
+        dt = time.perf_counter() - t0
+        assert out == baseline  # bit-identical to the local batched plane
+        return first[0], dt
+
+    rows = [
+        ("whole-response", run_whole),
+        ("streamed", lambda: run_streamed(False)),
+        ("streamed+overlap", lambda: run_streamed(True)),
+    ]
+    base_ttft = None
+    for name, fn in rows:
+        fn()  # warm the jit caches so TTFT measures the plane, not tracing
+        ttft, total = fn()
+        if base_ttft is None:
+            base_ttft = ttft
+        t.add(name, hops_out, hops_back, round(ttft, 4), round(total, 4),
+              round(n_tok / total, 1), round(base_ttft / ttft, 2))
+    return t
+
+
+def bench_overlap() -> Table:
+    from repro.launch.serve import serve_requests_streaming
+
+    t = Table("stream: async fabric/compute overlap", [
+        "overlap", "ticks", "s/serve", "tok/s",
+    ])
+    params, cfg, wires = _setup()
+    fabric = Fabric(n_ranks=8, config=FabricConfig(frame_phits=16, credits=4))
+    n_tok = N_REQUESTS * 2 * MAX_NEW
+    for overlap in (False, True):
+        kw = dict(max_new=MAX_NEW, pad_to=PAD_TO, slots=4, fabric=fabric,
+                  overlap=overlap)
+        serve_requests_streaming(params, cfg, wires, **kw)  # warmup
+        before = fabric.exchanges
+        dt = time_call(
+            lambda: serve_requests_streaming(params, cfg, wires, **kw),
+            repeats=3, warmup=0,
+        )
+        ticks = (fabric.exchanges - before) // 3
+        t.add(str(overlap), ticks, round(dt, 4), round(n_tok / dt, 1))
+    return t
+
+
+def bench_qos() -> Table:
+    from repro.stream import ChunkLane, StreamReader
+
+    t = Table("stream: QoS credit classes under a saturating tenant", [
+        "sched", "light_done_step", "heavy_done_step", "light_stalled",
+    ])
+    for name, weights in (
+        ("fifo", None), ("wrr 1:1", (1, 1)), ("wrr 3:1", (3, 1)),
+        ("wrr 1:3", (1, 3)),
+    ):
+        fab = Fabric(
+            n_ranks=4,
+            config=FabricConfig(frame_phits=2, credits=4, qos_weights=weights),
+        )
+        # tenant A saturates the 1 -> 0 path with bulk messages (level 2 ->
+        # class 0); tenant B streams one chunk burst behind them (level 1)
+        for i in range(8):
+            fab.mailbox(1).send(0, bytes([i]) * 96, list_level=2)
+        lane = ChunkLane(fab.mailbox(1), 0, list_level=1)
+        w = lane.writer(7)
+        w.write((1, 2, 3), eos=True)
+        lane.flush()
+        fab.exchange()
+        got = fab.mailbox(0).recv()
+        reader = StreamReader()
+        evs = reader.feed([d for d in got if d.list_level == 1])
+        assert evs and evs[0].ok and reader.streams[(1, 7)].tokens == [1, 2, 3]
+        light = next(d for d in got if d.list_level == 1).arrive_step
+        heavy = max(d.arrive_step for d in got if d.list_level == 2)
+        t.add(name, light, heavy, "yes" if light >= heavy else "no")
+    return t
+
+
+def run() -> List[Table]:
+    print("[bench_stream] streamed wires asserted bit-identical to the "
+          "batched plane in every row", file=sys.stderr)
+    return [bench_ttft(), bench_overlap(), bench_qos()]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="also write experiments/benchmarks.csv (CI smoke)")
+    args = ap.parse_args()
+    tables = run()
+    for tb in tables:
+        print(tb.show())
+        print()
+    if args.smoke:
+        os.makedirs("experiments", exist_ok=True)
+        with open("experiments/benchmarks.csv", "w") as f:
+            for tb in tables:
+                f.write(tb.csv())
+                f.write("\n")
+        print(f"wrote experiments/benchmarks.csv ({len(tables)} tables)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ import time
 
 def main() -> None:
     from . import bench_fig14, bench_fe_case_study, bench_schema_complexity
-    from . import bench_fabric, bench_pipeline, bench_serve
+    from . import bench_fabric, bench_pipeline, bench_serve, bench_stream
 
     mods = [
         ("fig14 (throughput vs optimum)", bench_fig14),
@@ -21,6 +21,7 @@ def main() -> None:
         ("framework pipeline + channel", bench_pipeline),
         ("serving plane (batched vs sequential)", bench_serve),
         ("routed fabric (hops + flow control)", bench_fabric),
+        ("streaming plane (TTFT + overlap + QoS)", bench_stream),
     ]
     tables = []
     for name, mod in mods:

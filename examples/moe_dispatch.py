@@ -64,6 +64,9 @@ def main():
     for r in range(R):
         for e in range(cfg.moe_experts):
             ids = token_ids[my_slice[r]][top[my_slice[r]] == e]
+            if ids.size == 0:
+                continue  # unused expert: nothing to route (empty wires
+                # are rejected at send — absence IS the empty list)
             sent[(r, e)] = ids
             # routed framed List: the expert id rides as the ListLevel
             boxes[r].send(owner(e), ids.tobytes(), list_level=e + 1)

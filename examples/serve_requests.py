@@ -21,7 +21,15 @@ wire to a serving shard, every shard answers through its own
 continuous-batching plane, and the response wires ride the multi-hop
 return path back — asserted token-identical to the local batched plane.
 
-Run:  PYTHONPATH=src python examples/serve_requests.py [--sharded]
+With ``--streaming`` the shards stream instead of buffering: every decode
+tick each shard mails the step's tokens back as framed chunk bursts
+(``repro.stream``), the fabric tick overlaps the next decode step
+(``Fabric.exchange_async``), and the ingress surfaces tokens the tick
+they arrive — the example prints the time-to-first-token against the
+whole-burst wall clock, and the final wires are asserted byte-identical
+to the batched plane.
+
+Run:  PYTHONPATH=src python examples/serve_requests.py [--sharded|--streaming]
       (use XLA_FLAGS=--xla_force_host_platform_device_count=8 to get
       a multi-rank fabric on CPU)
 """
@@ -48,6 +56,9 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="also route the burst through the message fabric "
                          "to per-shard batchers and assert token-identity")
+    ap.add_argument("--streaming", action="store_true",
+                    help="also stream token chunks back from the shards "
+                         "every decode tick and report time-to-first-token")
     ap.add_argument("--n-shards", type=int, default=None)
     args = ap.parse_args()
     cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=4)
@@ -102,6 +113,33 @@ def main():
                   f"({fabric.n_ranks - 1} shards, "
                   f"{fabric.frames_routed} frames), token-identical, "
                   f"in {dt_shard:.2f}s ({n_tok / dt_shard:.1f} tok/s)")
+
+    # --- streaming plane: tokens surface per decode tick --------------
+    if args.streaming:
+        from repro.launch.serve import default_serve_fabric, serve_requests_streaming
+
+        fabric = default_serve_fabric(args.n_shards)
+        if fabric is None:
+            print("[streaming]  skipped: needs >= 2 devices (set "
+                  "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        else:
+            arrivals = []
+            t0 = time.time()
+            stream_wires = serve_requests_streaming(
+                params, cfg, wires, max_new=MAX_NEW, pad_to=PAD_TO, slots=8,
+                fabric=fabric, overlap=True,
+                on_token=lambda m, j, step, tok:
+                    arrivals.append(time.time() - t0),
+            )
+            dt_stream = time.time() - t0
+            assert stream_wires == resp_wires, \
+                "streaming plane diverged from the batched plane"
+            print(f"[streaming]  same burst streamed per decode tick "
+                  f"({fabric.n_ranks - 1} shards, {len(arrivals)} token "
+                  f"events), byte-identical wires, "
+                  f"time-to-first-token {arrivals[0]:.3f}s vs "
+                  f"{dt_stream:.2f}s total "
+                  f"({n_tok / dt_stream:.1f} tok/s)")
 
     # --- seed sequential path, same burst ----------------------------
     t0 = time.time()

@@ -22,6 +22,20 @@ The fabric is deliberately host-driven at message granularity (submit /
 exchange / drain) — the same tick discipline as ``runtime.scheduler`` — while
 all per-frame work (framing, checksums, routing, hop pipelining) stays
 jitted on device.
+
+Two tick styles:
+
+* :meth:`Fabric.exchange` — synchronous: frame, route, and reassemble before
+  returning (the PR-2 behaviour).
+* :meth:`Fabric.exchange_async` + :meth:`Fabric.poll` — double-buffered: the
+  framing and the router scan are *dispatched* (JAX async dispatch) and the
+  host returns immediately; the RX readback and reassembly happen at the
+  next ``poll``.  A serve loop can therefore dispatch tick N's router scan,
+  run a compute step while it is in flight, and reap the deliveries
+  afterwards — fabric hops hide behind compute (``launch.serve``'s streaming
+  plane drives exactly this pipeline).  At most one tick is in flight;
+  ``exchange_async`` completes the previous one first, so message order per
+  (src, dst) stream is preserved.
 """
 from __future__ import annotations
 
@@ -50,13 +64,16 @@ from .router import FabricConfig, Router
 @dataclass
 class Delivery:
     """One reassembled message: who sent it, its wire bytes, CRC verdict,
-    and the ListLevel its frames carried (paper §IV-C; senders can use it
-    to tag streams, e.g. MoE expert ids)."""
+    the ListLevel its frames carried (paper §IV-C; senders can use it to
+    tag streams, e.g. MoE expert ids or QoS tenant classes), and the router
+    scan step its last frame arrived at (in-tick queueing latency — the
+    observable the QoS credit classes bound)."""
 
     src: int
     wire: bytes
     ok: bool = True
     list_level: int = 1
+    arrive_step: int = 0
 
 
 @dataclass
@@ -64,6 +81,7 @@ class _PartialMsg:
     data: bytearray = field(default_factory=bytearray)
     ok: bool = True
     level: int = 1
+    step: int = 0
 
 
 def _wire_words(wire: bytes, cap_words: int) -> np.ndarray:
@@ -96,6 +114,8 @@ class Fabric:
         self._rx_seq = [[0] * R for _ in range(R)]  # [rank][src] expected seq
         self._partial = [[_PartialMsg() for _ in range(R)] for _ in range(R)]
         self._inbox: List[List[Delivery]] = [[] for _ in range(R)]
+        #: the dispatched-but-not-reassembled tick (device arrays + counts)
+        self._inflight: Optional[Tuple] = None
         self.frames_routed = 0
         self.exchanges = 0
         #: fault-injection hook for tests/chaos: (tx, tx_valid) -> tx, applied
@@ -116,18 +136,53 @@ class Fabric:
     # -- send side ---------------------------------------------------------
 
     def send(self, src: int, dst: int, wire: bytes, list_level: int = 1) -> None:
+        """Queue ``wire`` for routed delivery ``src -> dst``.
+
+        Arguments are validated HERE, with clear errors, rather than
+        surfacing as shape mismatches or routing failures deep inside the
+        jitted router scan at exchange time.
+        """
         if not 0 <= dst < self.n_ranks:
             raise ValueError(f"dst {dst} outside fabric of {self.n_ranks}")
         if not 0 <= src < self.n_ranks:
             raise ValueError(f"src {src} outside fabric of {self.n_ranks}")
-        self._pending.append((src, dst, wire, list_level))
+        if not isinstance(wire, (bytes, bytearray, memoryview)):
+            raise ValueError(
+                f"wire must be bytes-like, got {type(wire).__name__}"
+            )
+        if len(wire) == 0:
+            raise ValueError(
+                "empty wire: zero-length sends carry no payload frames and "
+                "cannot be distinguished from a bare end-of-message "
+                "terminator — serialize an empty List instead"
+            )
+        self._pending.append((src, dst, bytes(wire), list_level))
 
     # -- the fabric tick ---------------------------------------------------
 
     def exchange(self) -> None:
-        """Frame, route, and deliver every pending send (one fabric tick)."""
+        """Frame, route, and deliver every pending send (one fabric tick).
+
+        Synchronous: completes any in-flight async tick first, then blocks
+        until this tick's messages are reassembled into the inboxes.
+        """
+        self.exchange_async()
+        self.poll()
+
+    def exchange_async(self) -> bool:
+        """Dispatch one fabric tick without waiting for delivery.
+
+        Frames every pending send and launches the router scan; device work
+        proceeds in the background (JAX async dispatch) while the host
+        returns immediately.  Call :meth:`poll` to reassemble the tick's
+        messages into the inboxes.  Depth-1 double buffer: a previous
+        in-flight tick is completed first, so per-stream FIFO order holds.
+        Returns True when a tick was dispatched (False: nothing pending).
+        """
+        if self._inflight is not None:
+            self._complete()
         if not self._pending:
-            return
+            return False
         sends, self._pending = self._pending, []
         phits = self.config.frame_phits
         frame_words = phits * PHIT_WORDS
@@ -172,9 +227,26 @@ class Fabric:
 
         if self.tx_hook is not None:
             tx = np.asarray(self.tx_hook(tx, tx_valid))
-        rx, rx_cnt, ok, crc_ok = self.router.deliver(
+        out = self.router.deliver(
             jnp.asarray(tx), jnp.asarray(tx_valid), total_frames=sum(n_live)
         )
+        self._inflight = out
+        self.exchanges += 1
+        return True
+
+    def poll(self) -> bool:
+        """Complete the in-flight async tick, reassembling its messages into
+        the inboxes.  Returns True when a tick was completed."""
+        if self._inflight is None:
+            return False
+        self._complete()
+        return True
+
+    def _complete(self) -> None:
+        """RX readback + reassembly of the in-flight tick (the host half of
+        the exchange, deferred by ``exchange_async``)."""
+        rx, rx_cnt, ok, crc_ok, rx_step = self._inflight
+        self._inflight = None
         self.last_crc_ok = bool(np.all(np.asarray(crc_ok)))
         if not bool(np.all(np.asarray(ok))):
             raise RuntimeError(
@@ -182,19 +254,23 @@ class Fabric:
                 "overflow) — check ranks and FabricConfig capacities"
             )
         self.frames_routed += int(np.sum(np.asarray(rx_cnt)))
-        self.exchanges += 1
         rx = np.asarray(rx)
+        rx_step = np.asarray(rx_step)
         counts = [int(c) for c in np.asarray(rx_cnt)]
         if not any(counts):
             return
         # RX split on the Pallas kernel twin: one batched call separates
         # every delivered frame into header + payload rows
         flat = np.concatenate([rx[r, :c] for r, c in enumerate(counts) if c])
+        steps = np.concatenate([rx_step[r, :c] for r, c in enumerate(counts) if c])
         hdrs, pays = self._split_bucketed(flat)
         off = 0
         for r, c in enumerate(counts):
             if c:
-                self._reassemble(r, hdrs[off : off + c], pays[off : off + c])
+                self._reassemble(
+                    r, hdrs[off : off + c], pays[off : off + c],
+                    steps[off : off + c],
+                )
                 off += c
 
     @staticmethod
@@ -232,13 +308,18 @@ class Fabric:
         )
         return np.asarray(hdr[:N]), np.asarray(pay[:N])
 
-    def _reassemble(self, rank: int, hdrs: np.ndarray, pays: np.ndarray) -> None:
+    def _reassemble(
+        self, rank: int, hdrs: np.ndarray, pays: np.ndarray,
+        steps: Optional[np.ndarray] = None,
+    ) -> None:
         """Order a rank's delivered frames per source and cut messages at
         the end-of-list terminators."""
+        if steps is None:
+            steps = np.zeros(len(hdrs), np.int32)
         srcs = (hdrs[:, HDR_ROUTE] >> 24) & 0xFF
         for src in sorted(set(int(s) for s in srcs)):
             sel = srcs == src
-            mh, mp = hdrs[sel], pays[sel]
+            mh, mp, ms = hdrs[sel], pays[sel], steps[sel]
             base = self._rx_seq[rank][src]
             seqs = (mh[:, HDR_ROUTE] & 0xFFFF).astype(np.int64)
             order = np.argsort((seqs - base) % SEQ_MOD)
@@ -247,6 +328,11 @@ class Fabric:
             for j in order:
                 size = int(mh[j, HDR_SIZE])
                 part.level = int(mh[j, HDR_LEVEL])
+                # scan steps restart at 0 each tick, but a message's frames
+                # all ride ONE tick (exchange frames every pending send
+                # together), so the max is within-tick; a partial spanning
+                # ticks means lost frames and the message is flagged anyway
+                part.step = max(part.step, int(ms[j]))
                 # CRC covers size | level | route | payload (frames.py)
                 covered = np.concatenate(
                     [mh[j, [HDR_SIZE, HDR_LEVEL, HDR_ROUTE]], mp[j]]
@@ -260,7 +346,8 @@ class Fabric:
                 expected = (int(seqs[j]) + 1) % SEQ_MOD
                 if size == 0:  # terminator: message complete
                     self._inbox[rank].append(
-                        Delivery(src, bytes(part.data), part.ok, part.level)
+                        Delivery(src, bytes(part.data), part.ok, part.level,
+                                 part.step)
                     )
                     self._partial[rank][src] = part = _PartialMsg()
                 else:

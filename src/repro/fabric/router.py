@@ -21,6 +21,17 @@ Topology and algorithm
   back-pressure analog).  Frames that cannot be injected wait in a
   per-device queue; transiting frames have priority over fresh injections,
   which preserves per-source FIFO order along a path.
+* **QoS credit classes** (``config.qos_weights``): instead of handing the
+  per-link credits to the frontmost frames FIFO, the inject step can run
+  *weighted round-robin* over credit classes keyed by the frame's
+  ``ListLevel`` (``class = level % n_classes``).  Each class holds a static
+  quota of the link credits (largest-remainder split of the weights) and
+  unused quota spills to the other classes in queue order, so the scheduler
+  stays work-conserving: a noisy tenant saturating a link cannot starve
+  another tenant's frames, yet idle classes cost nothing.  ``deliver``
+  additionally reports the scan step at which every frame arrived
+  (``rx_step``), which makes in-tick queueing delay — and therefore
+  starvation — observable to the mailbox layer.
 * Every step is one ``ppermute`` of a ``(credits, width)`` link buffer
   inside a ``lax.scan``; the step count is a static worst-case bound
   (pipeline fill + total frames over the busiest possible link), so the
@@ -39,10 +50,12 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .frames import (
+    HDR_LEVEL,
     HDR_WORDS,
     MAX_RANKS,
     PHIT_WORDS,
@@ -58,6 +71,9 @@ class FabricConfig:
     frame_phits: int = 16  # payload phits per frame
     credits: int = 4  # max in-flight frames per link per step
     rx_frames: Optional[int] = None  # per-rank delivery capacity (default R*T)
+    #: weighted round-robin credit classes at the inject step, keyed by
+    #: ``ListLevel % len(qos_weights)``.  None = single-class FIFO (legacy).
+    qos_weights: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self) -> None:
         if self.frame_phits < 1 or self.credits < 1:
@@ -65,10 +81,43 @@ class FabricConfig:
                 f"frame_phits/credits must be >= 1, got "
                 f"{self.frame_phits}/{self.credits}"
             )
+        if self.qos_weights is not None:
+            if len(self.qos_weights) < 1 or any(
+                w < 1 for w in self.qos_weights
+            ):
+                raise ValueError(
+                    f"qos_weights must be positive, got {self.qos_weights}"
+                )
+            if self.credits < len(self.qos_weights):
+                raise ValueError(
+                    f"need credits >= qos classes so every class holds at "
+                    f"least one credit, got credits={self.credits} for "
+                    f"{len(self.qos_weights)} classes"
+                )
 
     @property
     def frame_width(self) -> int:
         return HDR_WORDS + self.frame_phits * PHIT_WORDS
+
+
+def qos_quotas(credits: int, weights: Sequence[int]) -> Tuple[int, ...]:
+    """Largest-remainder split of the link credits across credit classes.
+
+    Every class gets >= 1 credit (guaranteed feasible by the config check
+    ``credits >= len(weights)``) and the quotas sum to exactly ``credits``,
+    so the per-step link capacity is unchanged by QoS.
+    """
+    w = np.asarray(weights, np.float64)
+    raw = credits * w / w.sum()
+    q = np.maximum(np.floor(raw).astype(np.int64), 1)
+    while q.sum() > credits:  # trim overflow from the largest class
+        q[int(np.argmax(q))] -= 1
+    rem = raw - np.floor(raw)
+    while q.sum() < credits:  # hand slack to the largest remainders
+        i = int(np.argmax(rem))
+        q[i] += 1
+        rem[i] -= 1.0
+    return tuple(int(x) for x in q)
 
 
 def _compact(buf: jnp.ndarray, valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -79,14 +128,16 @@ def _compact(buf: jnp.ndarray, valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.nda
     return buf[order], valid[order]
 
 
-def _append(rx, rx_cnt, ok, frames, take):
-    """Append ``frames[take]`` rows to the rx buffer at ``rx_cnt``."""
+def _append(rx, rx_cnt, rx_step, ok, frames, take, step_no):
+    """Append ``frames[take]`` rows to the rx buffer at ``rx_cnt``, recording
+    the scan step each row arrived at."""
     rx_cap = rx.shape[0]
     pos = jnp.where(take, rx_cnt + jnp.cumsum(take) - 1, rx_cap)
     rx = rx.at[pos].set(frames, mode="drop")
+    rx_step = rx_step.at[pos].set(step_no, mode="drop")
     new_cnt = rx_cnt + jnp.sum(take)
     ok = ok & (new_cnt <= rx_cap)
-    return rx, jnp.minimum(new_cnt, rx_cap), ok
+    return rx, jnp.minimum(new_cnt, rx_cap), rx_step, ok
 
 
 class Router:
@@ -130,18 +181,20 @@ class Router:
         tx: jnp.ndarray,
         tx_valid: jnp.ndarray,
         total_frames: Optional[int] = None,
-    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """Route every valid tx frame to its destination rank.
 
         ``tx`` is ``(ranks, T, width)`` u32 (width = HDR + payload words),
         ``tx_valid`` ``(ranks, T)`` bool.  ``total_frames`` is an optional
         upper bound on valid frames across all ranks (default ``R*T``): the
         scan length derives from it, so a tight bound means fewer hop steps.
-        Returns ``(rx, rx_count, ok, crc_ok)``: delivered frames per rank in
-        arrival order, the per-rank count, a routing flag (False on
-        undeliverable frames or buffer overflow — both indicate a
-        misconfigured fabric), and a CRC flag (False when a delivered frame
-        fails its checksum).
+        Returns ``(rx, rx_count, ok, crc_ok, rx_step)``: delivered frames
+        per rank in arrival order, the per-rank count, a routing flag (False
+        on undeliverable frames or buffer overflow — both indicate a
+        misconfigured fabric), a CRC flag (False when a delivered frame
+        fails its checksum), and the scan step each frame arrived at
+        (in-tick queueing latency: self-sends arrive at step 0, each
+        ppermute hop or credit stall adds one).
         """
         R, T, W = tx.shape
         if R != self.n_ranks or W != self.config.frame_width:
@@ -167,6 +220,24 @@ class Router:
         # worst case: every live frame parks at one rank
         q_cap = max(total, T) + credits
         axes = self.axis_names
+        quotas = (
+            qos_quotas(credits, cfg.qos_weights) if cfg.qos_weights else None
+        )
+
+        def select(queue, elig):
+            """Pick this step's link occupants: FIFO, or weighted
+            round-robin over ListLevel credit classes (work-conserving —
+            quota a class leaves unused spills to the others)."""
+            if quotas is None:
+                return elig & (jnp.cumsum(elig) <= credits)
+            cls = queue[:, HDR_LEVEL].astype(jnp.int32) % len(quotas)
+            take = jnp.zeros_like(elig)
+            for c, qc in enumerate(quotas):
+                in_c = elig & (cls == c)
+                take = take | (in_c & (jnp.cumsum(in_c) <= qc))
+            rest = elig & ~take
+            spill = credits - jnp.sum(take)
+            return take | (rest & (jnp.cumsum(rest) <= spill))
 
         def local(tx, tx_valid):  # (1, T, W), (1, T) — one device's view
             coords = [jax.lax.axis_index(a) for a in axes]
@@ -179,11 +250,15 @@ class Router:
             qvalid = jnp.pad(tx_valid[0], (0, pad))
             rx = jnp.zeros((rx_cap, W), jnp.uint32)
             rx_cnt = jnp.int32(0)
+            rx_step = jnp.zeros((rx_cap,), jnp.int32)
             ok = jnp.array(True)
+            step_no = jnp.int32(0)
 
             # self-sends never cross a link: deliver them up front
             self_take = qvalid & (route_dst(queue) == me)
-            rx, rx_cnt, ok = _append(rx, rx_cnt, ok, queue, self_take)
+            rx, rx_cnt, rx_step, ok = _append(
+                rx, rx_cnt, rx_step, ok, queue, self_take, step_no
+            )
             qvalid = qvalid & ~self_take
 
             for ai, axis in enumerate(axes):
@@ -192,18 +267,21 @@ class Router:
                     continue
                 perm = [(i, (i + 1) % n_axis) for i in range(n_axis)]
                 # worst case every live frame crosses the busiest link, plus
-                # pipeline fill around the ring
+                # pipeline fill around the ring (QoS keeps the per-step link
+                # capacity at `credits`, so the bound is scheduler-agnostic)
                 steps = -(-total // credits) + n_axis + 1
 
                 def step(carry, _):
-                    queue, qvalid, rx, rx_cnt, ok = carry
-                    # inject: up to `credits` frames still off-coordinate
-                    # on this axis, frontmost first (transit priority comes
-                    # from arrivals being re-queued at the front below)
+                    queue, qvalid, rx, rx_cnt, rx_step, ok, step_no = carry
+                    step_no = step_no + 1
+                    # inject: frames still off-coordinate on this axis, up
+                    # to `credits` per step, scheduled by `select` (transit
+                    # priority comes from arrivals being re-queued at the
+                    # front below)
                     dstc = self._coord(route_dst(queue), ai)
                     elig = qvalid & (dstc != coords[ai])
-                    rank1 = jnp.cumsum(elig)
-                    take = elig & (rank1 <= credits)
+                    take = select(queue, elig)
+                    rank1 = jnp.cumsum(take)
                     pos = jnp.where(take, rank1 - 1, credits)
                     link = jnp.zeros((credits, W), jnp.uint32).at[pos].set(
                         queue, mode="drop"
@@ -217,23 +295,33 @@ class Router:
                     avalid = jax.lax.ppermute(lvalid, axis, perm)
                     # deliver frames that reached their full destination
                     done = avalid & (route_dst(arr) == me)
-                    rx, rx_cnt, ok = _append(rx, rx_cnt, ok, arr, done)
+                    rx, rx_cnt, rx_step, ok = _append(
+                        rx, rx_cnt, rx_step, ok, arr, done, step_no
+                    )
                     # transit frames re-queue at the FRONT (FIFO per path)
                     comb = jnp.concatenate([arr, queue])
                     cvalid = jnp.concatenate([avalid & ~done, qvalid])
                     comb, cvalid = _compact(comb, cvalid)
                     ok = ok & ~jnp.any(cvalid[q_cap:])
-                    return (comb[:q_cap], cvalid[:q_cap], rx, rx_cnt, ok), None
+                    return (
+                        comb[:q_cap], cvalid[:q_cap], rx, rx_cnt, rx_step,
+                        ok, step_no,
+                    ), None
 
-                (queue, qvalid, rx, rx_cnt, ok), _ = jax.lax.scan(
-                    step, (queue, qvalid, rx, rx_cnt, ok), None, length=steps
+                (queue, qvalid, rx, rx_cnt, rx_step, ok, step_no), _ = (
+                    jax.lax.scan(
+                        step,
+                        (queue, qvalid, rx, rx_cnt, rx_step, ok, step_no),
+                        None,
+                        length=steps,
+                    )
                 )
 
             # anything still queued is undeliverable (bad dst / starved link)
             ok = ok & ~jnp.any(qvalid)
             live = jnp.arange(rx_cap) < rx_cnt
             crc_ok = jnp.all(jnp.where(live, verify_frames(rx), True))
-            return rx[None], rx_cnt[None], ok[None], crc_ok[None]
+            return rx[None], rx_cnt[None], ok[None], crc_ok[None], rx_step[None]
 
         spec = P(axes)
         return jax.jit(
@@ -241,7 +329,7 @@ class Router:
                 local,
                 mesh=self.mesh,
                 in_specs=(spec, spec),
-                out_specs=(spec, spec, spec, spec),
+                out_specs=(spec, spec, spec, spec, spec),
                 check_rep=False,
             )
         )

@@ -11,6 +11,7 @@ from .ops import (
     decode_gather,
     decode_message_kernel,
     decode_run,
+    encode_chunks_batch,
     encode_frames_batch,
     encode_run,
     runs_from_plan,
@@ -22,6 +23,6 @@ from .ops import (
 __all__ = [
     "batched_runs_from_plan", "decode_batch_kernel", "decode_frames_batch",
     "decode_gather", "decode_message_kernel", "decode_run",
-    "encode_frames_batch", "encode_run", "runs_from_plan",
-    "wire_to_u32", "wires_to_u32", "write_headers",
+    "encode_chunks_batch", "encode_frames_batch", "encode_run",
+    "runs_from_plan", "wire_to_u32", "wires_to_u32", "write_headers",
 ]

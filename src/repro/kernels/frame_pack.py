@@ -113,6 +113,53 @@ def pack_frames_batch(
     )(headers.astype(jnp.uint32), payloads.astype(jnp.uint32))
 
 
+def _chunk_kernel(meta_ref, tok_ref, cnt_ref, out_ref):
+    # one row block per grid step: [meta | tokens | count] in wire layout
+    out_ref[...] = jnp.concatenate(
+        [meta_ref[...], tok_ref[...], cnt_ref[...]], axis=-1
+    )
+
+
+def pack_chunks_batch(
+    meta: jnp.ndarray,  # (B, 3) u32 — stream_id, step, flags per chunk
+    tokens: jnp.ndarray,  # (B, cap) u32 — pre-masked token words
+    counts: jnp.ndarray,  # (B, 1) u32 — true token count per chunk
+    *,
+    block: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Assemble B small token chunks into wire rows in one call.
+
+    The streaming plane emits ONE tiny chunk per live sequence per decode
+    tick; batching them through a single Pallas pass amortizes the SER
+    launch the same way ``pack_frames_batch`` does for whole messages.
+    Output rows are ``[stream_id, step, flags, tok0..tok_{cap-1}, count]``
+    — the HW->SW List layout (count AFTER elements, §IV-B), so rows
+    trimmed to their live tokens concatenate into a burst the host parses
+    back-to-front.
+    """
+    B, cap = tokens.shape
+    width = cap + meta.shape[1] + 1
+    capB = -(-max(B, 1) // block) * block
+    padB = capB - B
+    meta = jnp.pad(meta.astype(jnp.uint32), ((0, padB), (0, 0)))
+    tokens = jnp.pad(tokens.astype(jnp.uint32), ((0, padB), (0, 0)))
+    counts = jnp.pad(counts.astype(jnp.uint32), ((0, padB), (0, 0)))
+    out = pl.pallas_call(
+        _chunk_kernel,
+        grid=(capB // block,),
+        in_specs=[
+            pl.BlockSpec((block, meta.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((block, cap), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((capB, width), jnp.uint32),
+        interpret=interpret,
+    )(meta, tokens, counts)
+    return out[:B]
+
+
 def _split_kernel(fr_ref, hdr_ref, pay_ref):
     fr = fr_ref[...]
     hdr_ref[...] = fr[:, :HDR_WORDS]

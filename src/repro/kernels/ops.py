@@ -18,7 +18,13 @@ import numpy as np
 from ..core.idl import Schema
 from ..core.vectorized import BatchedDecodePlan, DecodePlan, stack_wires
 from ..fabric.frames import frame_parts_batch
-from .frame_pack import pack_frames_batch, pack_run, stamp_headers, unpack_frames_batch
+from .frame_pack import (
+    pack_chunks_batch,
+    pack_frames_batch,
+    pack_run,
+    stamp_headers,
+    unpack_frames_batch,
+)
 from .phit_unpack import unpack_gather, unpack_run
 
 
@@ -77,6 +83,27 @@ def encode_frames_batch(
 def decode_frames_batch(frames_u32, interpret: bool = True):
     """RX split of delivered frames: (N, width) -> (headers, payloads)."""
     return unpack_frames_batch(frames_u32, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def encode_chunks_batch(
+    meta,  # (B, 3) int32/u32 — (stream_id, step, flags) per chunk
+    tokens,  # (B, cap) token ids, zero-padded past each chunk's count
+    counts,  # (B,) int32 true token counts
+    interpret: bool = True,
+):
+    """Small-chunk SER for the streaming plane: B token chunks -> B wire
+    rows ``[meta | tokens | count]`` (count after elements, §IV-B).
+
+    Tail tokens beyond each chunk's count are masked to zero here, then the
+    Pallas ``pack_chunks_batch`` kernel assembles every row in one pass.
+    """
+    counts = jnp.asarray(counts, jnp.uint32)
+    col = jnp.arange(tokens.shape[1], dtype=jnp.uint32)[None, :]
+    toks = jnp.where(col < counts[:, None], tokens.astype(jnp.uint32), 0)
+    return pack_chunks_batch(
+        jnp.asarray(meta), toks, counts[:, None], interpret=interpret
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,12 @@
 """Serving driver: the batched HGum message plane + continuous batching.
 
 Requests arrive as HGum-serialized wires (``request_schema`` — a List of
-prompts with unknown lengths, the paper's List case).  Two request paths:
+prompts with unknown lengths, the paper's List case).  Request paths:
+``serve_requests`` (local batched plane), ``serve_requests_sharded``
+(whole-response wires over the routed fabric), ``serve_requests_streaming``
+(token chunks stream back every decode tick, async fabric/compute overlap,
+per-tenant QoS levels), and the seed ``serve_request`` baseline.  The first
+two are documented below:
 
 * **Batched plane (default)** — ``serve_requests`` takes MANY request wires
   at once.  One *batched structure pass* (``core.vectorized.batch_plans``)
@@ -213,6 +218,44 @@ def serve_requests(
 # ---------------------------------------------------------------------------
 
 
+def place_requests(
+    router,
+    n_requests: int,
+    shards: List[int],
+    capacity: int,
+    weights: Optional[List[int]] = None,
+) -> List[int]:
+    """Topology-aware ingress placement (ROADMAP item): requests go to the
+    nearest shard with free capacity instead of round-robin.
+
+    Shards are ordered by round-trip fabric distance from the ingress
+    (``Router.hops(0, s) + hops(s, 0)`` — request path plus response/stream
+    return path); each request takes the nearest shard whose load is still
+    under ``capacity``, spilling to the next nearest when full.  When every
+    shard is full, the least-loaded (nearest first) takes the overflow.
+    ``weights`` measures each request's load — pass per-request sequence
+    counts with ``capacity`` = KV slots so "free" means free *decode slots*
+    (the streaming ingress does; default: one unit per request).  On a 1D
+    ring every round trip is the same length, so placement degenerates to
+    fill-nearest-rank-first — locality is a mesh property; the capacity
+    spill is what keeps one shard from absorbing a whole burst.  Placement
+    cannot change tokens — rows decode independently — only how far each
+    request's wires travel.
+    """
+    order = sorted(
+        shards, key=lambda s: (router.hops(0, s) + router.hops(s, 0), s)
+    )
+    w = weights if weights is not None else [1] * n_requests
+    load = {s: 0 for s in order}
+    placement = []
+    for i in range(n_requests):
+        free = [s for s in order if load[s] < capacity]
+        s = free[0] if free else min(order, key=lambda t: load[t])
+        placement.append(s)
+        load[s] += max(1, w[i])
+    return placement
+
+
 def default_serve_fabric(n_shards: Optional[int] = None):
     """The fabric ``serve_requests_sharded`` builds when none is passed:
     rank 0 ingress plus up to 7 serving shards on the available devices.
@@ -242,12 +285,14 @@ def serve_requests_sharded(
     admit_cap: Optional[int] = None,
     n_shards: Optional[int] = None,
     fabric=None,
+    placement: Optional[List[int]] = None,
 ) -> List[bytes]:
     """Answer N request wires across fabric-connected serving shards.
 
     Rank 0 is the *ingress*: it routes each request wire over the message
     fabric (``repro.fabric``) to one of the serving shards (ranks 1..R-1,
-    round-robin), every shard answers its share through the batched plane
+    nearest free shard first — ``place_requests``; pass ``placement`` to
+    pin requests to shards), every shard answers its share through the batched plane
     (``serve_requests`` — batched DES, ContinuousBatcher, bulk SER), and the
     response wires ride the fabric back to the ingress, which restores
     request order.  Requests and responses cross the links as routed framed
@@ -270,11 +315,14 @@ def serve_requests_sharded(
         )
     shards = list(range(1, fabric.n_ranks))
     ingress = fabric.mailbox(0)
-    place = lambda i: shards[i % len(shards)]
+    if placement is None:
+        placement = place_requests(
+            fabric.router, len(wires), shards, capacity=max(1, slots)
+        )
 
     # ingress -> shards: route the raw request wires
     for i, w in enumerate(wires):
-        ingress.send(place(i), w)
+        ingress.send(placement[i], w)
     fabric.exchange()
 
     # each shard answers its share through the batched plane
@@ -294,7 +342,7 @@ def serve_requests_sharded(
             box.send(0, rw)
     fabric.exchange()
 
-    # ingress: responses arrive per-shard in FIFO order; undo round-robin
+    # ingress: responses arrive per-shard in FIFO order; undo the placement
     per_shard: Dict[int, List[bytes]] = {}
     for d in ingress.recv():
         if not d.ok:
@@ -303,10 +351,176 @@ def serve_requests_sharded(
     out: List[bytes] = []
     cursor = {s: 0 for s in shards}
     for i in range(len(wires)):
-        s = place(i)
+        s = placement[i]
         out.append(per_shard[s][cursor[s]])
         cursor[s] += 1
     return out
+
+
+# ---------------------------------------------------------------------------
+# Streaming plane — tokens leave each shard the tick they decode (ISSUE 3);
+# composes the batched compute plane with repro.stream over repro.fabric
+# ---------------------------------------------------------------------------
+
+
+def serve_requests_streaming(
+    params,
+    cfg,
+    wires: List[bytes],
+    max_new: int = 16,
+    pad_to: int = 64,
+    slots: int = 8,
+    admit_cap: Optional[int] = None,
+    n_shards: Optional[int] = None,
+    fabric=None,
+    placement: Optional[List[int]] = None,
+    qos_levels: Optional[List[int]] = None,
+    overlap: bool = True,
+    on_token=None,
+) -> List[bytes]:
+    """Answer N request wires with token-level streamed responses.
+
+    Same placement and compute as ``serve_requests_sharded`` — rank-0
+    ingress, nearest-free-shard placement, one ContinuousBatcher per shard
+    — but the response path streams: every decode tick, each shard writes
+    the step's tokens into per-sequence ``StreamWriter``s and one
+    ``ChunkLane`` burst per (shard, tenant) rides the fabric back, so the
+    ingress sees each token one fabric tick after it decodes instead of
+    after the whole generation.  ``on_token(req_idx, prompt_idx, step,
+    token)`` fires as tokens arrive (time-to-first-token = first admit tick
+    + one exchange).
+
+    With ``overlap=True`` (default) the fabric and compute pipelines run
+    double-buffered: each tick dispatches the batched decode
+    (``ContinuousBatcher.step_begin``), reaps the PREVIOUS tick's routed
+    chunks while the decode executes (``Fabric.poll``), syncs the decode
+    (``step_finish``), and dispatches the new bursts without waiting
+    (``Fabric.exchange_async``) — multi-hop latency hides behind decode
+    steps.  ``overlap=False`` runs the same ticks synchronously (chunks
+    arrive one tick earlier; tokens identical either way).
+
+    ``qos_levels`` tags each request's stream chunks with a ListLevel (the
+    tenant's QoS class when the fabric is built with
+    ``FabricConfig.qos_weights``); default: level 1 for everyone.
+
+    Returns the final response wires, byte-identical to ``serve_requests``
+    on the same inputs (the streamed tokens are re-serialized through the
+    same bulk SER).  Falls back to the local batched plane (no streaming
+    events) when the fabric would have fewer than 2 ranks.
+    """
+    from ..stream import ChunkLane, StreamReader
+
+    if fabric is None:
+        fabric = default_serve_fabric(n_shards)
+    if fabric is None or fabric.n_ranks < 2:
+        return serve_requests(
+            params, cfg, wires, max_new=max_new, pad_to=pad_to,
+            slots=slots, admit_cap=admit_cap,
+        )
+    shards = list(range(1, fabric.n_ranks))
+    ingress = fabric.mailbox(0)
+    reqs = decode_request_batch(wires)  # ingress keeps rids + prompt counts
+    if placement is None:
+        # the ingress already decoded the burst, so placement can weigh each
+        # request by its sequence count: "free" = free KV slots, not
+        # request headroom
+        placement = place_requests(
+            fabric.router, len(wires), shards, capacity=max(1, slots),
+            weights=[len(p) for _, p in reqs],
+        )
+    levels = list(qos_levels) if qos_levels is not None else [1] * len(wires)
+
+    # ingress -> shards: route the raw request wires
+    for i, w in enumerate(wires):
+        ingress.send(placement[i], w, list_level=levels[i])
+    fabric.exchange()
+
+    # shard setup: per-shard batcher + per-sequence stream writers.  The
+    # k-th delivery at shard s is the k-th request placed on s (per-source
+    # FIFO), which maps shard-local stream ids back to global requests.
+    globals_of = {s: [i for i, p in enumerate(placement) if p == s]
+                  for s in shards}
+    sched = SchedulerConfig(
+        slots=slots, prompt_cap=pad_to, max_new=max_new, admit_cap=admit_cap
+    )
+    batchers: Dict[int, ContinuousBatcher] = {}
+    lanes: Dict[Tuple[int, int], ChunkLane] = {}
+    writers: Dict[Tuple[int, int, int], object] = {}
+    expected = []  # (src shard, stream_id) keys the reader must close
+    for s in shards:
+        box = fabric.mailbox(s)
+        arrived = box.recv()
+        if not arrived:
+            continue
+        bad = [d.src for d in arrived if not d.ok]
+        if bad:
+            raise RuntimeError(f"shard {s}: corrupt request frames from {bad}")
+        local_reqs = decode_request_batch([d.wire for d in arrived])
+        batcher = ContinuousBatcher(params, cfg, sched)
+        batchers[s] = batcher
+        for k, (_, prompts) in enumerate(local_reqs):
+            lvl = levels[globals_of[s][k]]
+            lane = lanes.setdefault(
+                (s, lvl), ChunkLane(box, 0, list_level=lvl)
+            )
+            for j, p in enumerate(prompts):
+                batcher.submit((k, j), p)
+                sid = (k << 16) | j
+                writers[(s, k, j)] = lane.writer(sid)
+                expected.append((s, sid))
+
+    # the streamed tick pipeline
+    reader = StreamReader()
+
+    def _pump() -> None:
+        for ev in reader.feed(ingress.recv()):
+            if not ev.ok:
+                raise RuntimeError(
+                    f"ingress: corrupt stream chunks from shard {ev.src}"
+                )
+            if on_token is not None:
+                k, j = ev.stream_id >> 16, ev.stream_id & 0xFFFF
+                m = globals_of[ev.src][k]
+                for t, tok in enumerate(ev.tokens):
+                    on_token(m, j, ev.step + t, tok)
+
+    while any(b.pending or b.n_active for b in batchers.values()):
+        for b in batchers.values():
+            b.step_begin()  # dispatch compute; device runs in background
+        if overlap:
+            fabric.poll()  # reap last tick's chunks while decode runs
+            _pump()
+        for s, b in batchers.items():
+            for (k, j), pos, tok in b.step_finish():
+                writers[(s, k, j)].write((tok,), eos=(pos == max_new - 1))
+        for lane in lanes.values():
+            lane.flush()  # ONE burst per (shard, tenant) this tick
+        if overlap:
+            fabric.exchange_async()  # dispatch routing; overlap next tick
+        else:
+            fabric.exchange()
+            _pump()
+
+    # drain: complete the in-flight tick and any stragglers
+    for _ in range(3):
+        if reader.all_eos(expected):
+            break
+        fabric.exchange()
+        _pump()
+    if not reader.all_eos(expected):
+        raise RuntimeError("streaming serve: streams did not reach EOS")
+
+    # final wires from the streamed tokens — same bulk SER as the batched
+    # plane, so the result is byte-identical to serve_requests
+    outs: Dict[Tuple[int, int], List[int]] = {}
+    for (src, sid), st in reader.streams.items():
+        m = globals_of[src][sid >> 16]
+        outs[(m, sid & 0xFFFF)] = st.tokens
+    responses = [
+        (rid, [outs[(m, j)] for j in range(len(prompts))])
+        for m, (rid, prompts) in enumerate(reqs)
+    ]
+    return encode_response_batch(responses)
 
 
 def main() -> None:
@@ -323,8 +537,15 @@ def main() -> None:
     ap.add_argument("--sharded", action="store_true",
                     help="route requests over the message fabric to "
                          "per-shard batchers (ranks 1..N serve, rank 0 ingress)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="sharded serve with token-level streamed responses "
+                         "(chunks ride the fabric back every decode tick)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the async fabric/compute overlap pipeline "
+                         "for --streaming")
     ap.add_argument("--n-shards", type=int, default=None,
-                    help="serving shards for --sharded (default: devices-1)")
+                    help="serving shards for --sharded/--streaming "
+                         "(default: devices-1)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -344,12 +565,21 @@ def main() -> None:
     total_b = sum(len(w) for w in wires)
     print(f"[serve] {len(wires)} request wires, {total_b} bytes total")
     t0 = time.time()
+    first_tok_t = []
     if args.sequential:
         resp_wires = [
             serve_request(params, cfg, w, max_new=args.max_new,
                           pad_to=args.pad_to)
             for w in wires
         ]
+    elif args.streaming:
+        resp_wires = serve_requests_streaming(
+            params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
+            slots=args.slots, n_shards=args.n_shards,
+            overlap=not args.no_overlap,
+            on_token=lambda m, j, step, tok: first_tok_t.append(time.time())
+            if not first_tok_t else None,
+        )
     elif args.sharded:
         resp_wires = serve_requests_sharded(
             params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
@@ -366,10 +596,14 @@ def main() -> None:
         rid, outs = decode_response(rw)
         n_tok += sum(len(o) for o in outs)
     mode = ("sequential" if args.sequential
+            else f"streaming(slots={args.slots})" if args.streaming
             else f"sharded(slots={args.slots})" if args.sharded
             else f"batched(slots={args.slots})")
     print(f"[serve] {mode}: {len(wires)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({len(wires)/dt:.2f} req/s, {n_tok/dt:.1f} tok/s)")
+    if first_tok_t:
+        print(f"[serve] time-to-first-token {first_tok_t[0] - t0:.3f}s "
+              f"(vs {dt:.2f}s total)")
     rid, outs = decode_response(resp_wires[0])
     for i, o in enumerate(outs[:2]):
         print(f"  req {rid} out[{i}][:8] = {o[:8]}")

@@ -15,6 +15,15 @@ request.  This module is the compute half of the batched message plane
   runs ONE batched decode step for all live slots and evicts the finished
   ones.
 
+:meth:`step` is split into :meth:`step_begin` / :meth:`step_finish` so a
+driver can overlap fabric ticks with compute (ISSUE 3's streaming plane):
+``step_begin`` dispatches the admit prefill and the batched decode — JAX
+async dispatch returns before the device finishes — and ``step_finish``
+performs the one host sync, records the tick's tokens, and returns them as
+``(seq_id, position, token)`` emissions for the per-sequence StreamWriters.
+Between the two calls the host is free to reap/dispatch
+``Fabric.exchange_async`` ticks while the decode step runs.
+
 Sequences are plain token lists; the wire plane (``launch.serve``) sits on
 either side of this class — batched HGum DES in front, bulk SER behind.
 """
@@ -123,6 +132,8 @@ class ContinuousBatcher:
         self.pending: Deque[_Sequence] = deque()
         self.done: Dict[Hashable, List[int]] = {}
         self.steps_run = 0
+        self._tick_emit: List[Tuple[Hashable, int, int]] = []
+        self._stepped = False
 
     def _batch_specs(self, A: int) -> Dict[str, jax.ShapeDtypeStruct]:
         S = self.sched.prompt_cap
@@ -173,6 +184,7 @@ class ContinuousBatcher:
             seq.out.append(int(first[j]))
             seq.remaining = self.sched.max_new - 1
             self.active[free[j]] = seq
+            self._tick_emit.append((seq.seq_id, 0, int(first[j])))
         self._evict()
 
     def _evict(self) -> None:
@@ -181,22 +193,50 @@ class ContinuousBatcher:
                 self.done[seq.seq_id] = seq.out
                 self.active[i] = None
 
-    def step(self) -> None:
-        """One scheduler tick: admit into free slots, then one batched
-        decode step for every live slot."""
+    def step_begin(self) -> bool:
+        """Dispatch one scheduler tick: admit into free slots, then launch
+        one batched decode step for every live slot.
+
+        Returns immediately after dispatch (JAX async) — the host can run
+        fabric work while the decode executes.  Returns True when a decode
+        step was dispatched.  Must be paired with :meth:`step_finish`.
+        """
+        self._tick_emit = []
         self._admit()
         if self.n_active == 0:
-            return
+            self._stepped = False
+            return False
         self.cur_tok, self.cache = self.decode_step(
             self.params, self.cache, self.cur_tok
         )
         self.steps_run += 1
+        self._stepped = True
+        return True
+
+    def step_finish(self) -> List[Tuple[Hashable, int, int]]:
+        """Sync the dispatched tick and return its emissions.
+
+        One host sync reads the decode step's tokens; the return value is
+        every token the tick produced — admit-time first tokens included —
+        as ``(seq_id, position, token)`` triples in emission order.
+        """
+        emitted, self._tick_emit = self._tick_emit, []
+        if not self._stepped:
+            return emitted
+        self._stepped = False
         toks = np.asarray(self.cur_tok)[:, 0]  # one host sync per tick
         for i, seq in enumerate(self.active):
             if seq is not None:
                 seq.out.append(int(toks[i]))
                 seq.remaining -= 1
+                emitted.append((seq.seq_id, len(seq.out) - 1, int(toks[i])))
         self._evict()
+        return emitted
+
+    def step(self) -> None:
+        """One synchronous scheduler tick (dispatch + sync back to back)."""
+        self.step_begin()
+        self.step_finish()
 
     def run(self) -> Dict[Hashable, List[int]]:
         """Drain the queue; returns seq_id -> generated tokens."""

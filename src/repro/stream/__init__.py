@@ -1,0 +1,40 @@
+"""Streaming message plane: token-level streamed responses over the fabric.
+
+HGum serializes a List incrementally — neither side buffers the whole
+message (§IV).  This package applies that rule to the serving response
+path: instead of waiting for a shard's whole ``response_schema`` wire, each
+decode step's tokens leave the shard the tick they are produced, as framed
+chunk bursts (``chunks.py``) demultiplexed back into per-request streams at
+the ingress (``plane.py``).
+
+Layers:
+
+* ``chunks`` — the chunk wire format (``encode_token_chunk`` /
+  ``encode_chunk_burst`` / ``decode_token_chunks``): count-after-elements
+  List fragments with stream ids, step numbers, and explicit end-of-stream
+  terminators; bursts serialize through the batched Pallas small-chunk
+  kernel.
+* ``plane``  — ``StreamWriter``/``ChunkLane`` on the shard side (one fabric
+  message per tenant per tick), ``StreamReader`` at the ingress (ordering,
+  per-stream corruption flags, EOS tracking).
+
+The serve driver that ties this to compute — overlapped
+``Fabric.exchange_async`` ticks against ``ContinuousBatcher`` steps, QoS
+credit classes per tenant — is ``launch.serve.serve_requests_streaming``.
+"""
+from .chunks import (
+    CHUNK_META_WORDS,
+    FLAG_EOS,
+    MAX_CHUNK_TOKENS,
+    TokenChunk,
+    decode_token_chunks,
+    encode_chunk_burst,
+    encode_token_chunk,
+)
+from .plane import ChunkLane, StreamEvent, StreamReader, StreamState, StreamWriter
+
+__all__ = [
+    "CHUNK_META_WORDS", "FLAG_EOS", "MAX_CHUNK_TOKENS", "TokenChunk",
+    "decode_token_chunks", "encode_chunk_burst", "encode_token_chunk",
+    "ChunkLane", "StreamEvent", "StreamReader", "StreamState", "StreamWriter",
+]

@@ -1,0 +1,155 @@
+"""Token-chunk wire format for the streaming message plane.
+
+HGum's claim is that a large List streams through the SER/DES incrementally
+— nobody buffers the whole message.  Applied to serving, a response is a
+List of generated tokens whose length is unknown until decode finishes, so
+the shard should emit each decode step's tokens the tick they are produced
+instead of buffering the whole ``response_schema`` wire.  The unit of that
+stream is a *token chunk*: one decode step's tokens for one sequence,
+serialized as an incremental HGum List fragment.
+
+Chunk layout (u32 words, HW->SW List convention — the count comes AFTER
+the elements, paper §IV-B, so the host parses from the end)::
+
+    [ stream_id | step | flags ] [ tok0 .. tok_{n-1} ] [ n ]
+
+* ``stream_id`` — writer-scoped stream identifier (the serve plane packs
+  ``(local_request << 16) | prompt_index``);
+* ``step``      — chunk sequence number within the stream, starting at 0;
+  the reader flags gaps exactly like the fabric flags frame-seq gaps;
+* ``flags``     — bit 0 = end-of-stream terminator (the explicit EOS the
+  paper's size-0 frame plays at the framing layer);
+* ``n``         — token count, written last.
+
+Because the count trails the elements, chunk wires concatenate into a
+*burst* that parses back-to-front with no delimiters: the last word of the
+burst is the last chunk's count, which locates that chunk's start, and so
+on.  One fabric message per (shard, tenant) per tick therefore carries every
+live sequence's chunk — ``encode_chunk_burst`` assembles them all in ONE
+batched Pallas pass (``kernels.ops.encode_chunks_batch``).
+
+Ordering and integrity ride the layers below: the fabric's route-word seq
+numbers order the bursts per (src, dst) stream, the per-frame CRC32 flags
+corruption per message, and ``stream.plane.StreamReader`` turns both into
+per-stream corruption flags.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+#: words before the token run: stream_id, step, flags
+CHUNK_META_WORDS = 3
+#: smallest legal chunk: meta words + the trailing count
+CHUNK_MIN_WORDS = CHUNK_META_WORDS + 1
+#: flags bit 0 — end-of-stream terminator
+FLAG_EOS = 1
+#: sanity bound used by the back-to-front parser (a corrupt count word must
+#: not send the cursor to a plausible-looking but wrong chunk boundary)
+MAX_CHUNK_TOKENS = 1 << 16
+
+
+@dataclass(frozen=True)
+class TokenChunk:
+    """One decode step's tokens for one stream."""
+
+    stream_id: int
+    step: int
+    tokens: Tuple[int, ...]
+    eos: bool = False
+
+
+def encode_token_chunk(
+    stream_id: int, step: int, tokens: Sequence[int], eos: bool = False
+) -> bytes:
+    """Serialize ONE chunk (reference path; bursts use the Pallas kernel)."""
+    n = len(tokens)
+    if n >= MAX_CHUNK_TOKENS:
+        raise ValueError(f"chunk of {n} tokens exceeds {MAX_CHUNK_TOKENS}")
+    words = np.empty(CHUNK_META_WORDS + n + 1, np.uint32)
+    words[0] = stream_id
+    words[1] = step
+    words[2] = FLAG_EOS if eos else 0
+    words[CHUNK_META_WORDS : CHUNK_META_WORDS + n] = np.asarray(
+        tokens, np.uint32
+    ) if n else 0
+    words[-1] = n
+    return words.tobytes()
+
+
+def encode_chunk_burst(chunks: Sequence[TokenChunk]) -> bytes:
+    """Serialize a tick's chunks into one burst wire via the batched Pallas
+    small-chunk kernel (one SER pass for every live sequence).
+
+    Bit-identical to concatenating ``encode_token_chunk`` outputs; the
+    token capacity and batch axes are pow2-bucketed so the jitted kernel is
+    reused across ticks with varying live-sequence counts.
+    """
+    from ..kernels.ops import encode_chunks_batch
+
+    if not chunks:
+        return b""
+    B = len(chunks)
+    cap = max(max(len(c.tokens) for c in chunks), 1)
+    cap = 1 << (cap - 1).bit_length()
+    Bp = 1 << max(B - 1, 0).bit_length()
+    meta = np.zeros((Bp, CHUNK_META_WORDS), np.uint32)
+    toks = np.zeros((Bp, cap), np.uint32)
+    counts = np.zeros((Bp,), np.int32)
+    for i, c in enumerate(chunks):
+        if len(c.tokens) >= MAX_CHUNK_TOKENS:
+            raise ValueError(
+                f"chunk of {len(c.tokens)} tokens exceeds {MAX_CHUNK_TOKENS}"
+            )
+        meta[i] = (c.stream_id, c.step, FLAG_EOS if c.eos else 0)
+        toks[i, : len(c.tokens)] = c.tokens
+        counts[i] = len(c.tokens)
+    rows = np.asarray(encode_chunks_batch(meta, toks, counts))[:B]
+    # trim each row to its live tokens: [meta | tok0..tok_{n-1} | count]
+    parts = []
+    for i in range(B):
+        n = int(counts[i])
+        parts.append(rows[i, : CHUNK_META_WORDS + n].tobytes())
+        parts.append(rows[i, -1:].tobytes())
+    return b"".join(parts)
+
+
+def decode_token_chunks(wire: bytes) -> Tuple[List[TokenChunk], bool]:
+    """Parse a burst wire back into chunks, BACK TO FRONT (§IV-B: the host
+    reads trailing counts to locate element runs).
+
+    Returns ``(chunks, ok)`` with chunks in emission order.  ``ok`` is
+    False when the structure does not parse cleanly (truncated wire,
+    impossible count) — the parser salvages every chunk it can walk from
+    the end so a flagged delivery still attributes corruption to streams.
+    """
+    ok = True
+    nbytes = len(wire)
+    if nbytes % 4:
+        ok = False
+        nbytes -= nbytes % 4
+    words = np.frombuffer(wire[:nbytes], np.uint32)
+    out: List[TokenChunk] = []
+    end = len(words)
+    while end > 0:
+        if end < CHUNK_MIN_WORDS:
+            ok = False
+            break
+        n = int(words[end - 1])
+        lo = end - 1 - n - CHUNK_META_WORDS
+        if n >= MAX_CHUNK_TOKENS or lo < 0:
+            ok = False
+            break
+        out.append(
+            TokenChunk(
+                stream_id=int(words[lo]),
+                step=int(words[lo + 1]),
+                tokens=tuple(int(t) for t in words[lo + CHUNK_META_WORDS : end - 1]),
+                eos=bool(int(words[lo + 2]) & FLAG_EOS),
+            )
+        )
+        end = lo
+    out.reverse()
+    return out, ok

