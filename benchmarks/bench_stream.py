@@ -1,6 +1,7 @@
-"""Streaming message plane: time-to-first-token, overlap, and QoS fairness.
+"""Streaming message plane: time-to-first-token, routing mode, overlap,
+and QoS fairness.
 
-Three measurements on the 8 simulated host devices:
+Measurements on the 8 simulated host devices:
 
 * **TTFT vs whole-response** — the same request burst served three ways on
   a fabric where every request is pinned >= 2 hops from the ingress:
@@ -9,6 +10,14 @@ Three measurements on the 8 simulated host devices:
   async overlap pipeline off and on.  Time-to-first-token is the wall
   clock until the first ``on_token`` callback; the streamed paths must
   also be byte-identical to the local batched plane.
+* **routing mode at >= 2 hops** — the same streamed serve with the shard
+  pinned deep in the ring, under dimension-order (+1 only) vs
+  shortest-path routing: TTFT, total time, and the arrive-step latency
+  trace of every chunk (collected via ``on_event`` and reduced with
+  ``repro.stream.arrive_stats`` — the same statistics
+  ``StreamReader.arrive_stats`` reports) — the request path shrinks from
+  6 hops to 2, and every per-tick chunk burst rides the short way back,
+  so both the first token and the per-token wobble drop.
 * **overlap on/off** — tokens/s of the streamed path with the synchronous
   tick vs the double-buffered ``exchange_async`` pipeline (fabric hops
   hiding behind decode steps).
@@ -37,10 +46,14 @@ import numpy as np
 
 from common import Table, time_call
 from repro.fabric import Fabric, FabricConfig
+from repro.stream import arrive_stats
 
 MAX_NEW = 8
 PAD_TO = 8
 N_REQUESTS = 4
+
+#: headline numbers for BENCH_stream.json (filled by run())
+LAST_METRICS: dict = {}
 
 
 def _setup(n_layers: int = 2):
@@ -124,6 +137,108 @@ def bench_ttft(max_new: int = 48) -> Table:
     return t
 
 
+def bench_routing(max_new: int = 24) -> Table:
+    from repro.launch.serve import (
+        encode_request, serve_requests, serve_requests_streaming,
+    )
+
+    t = Table("stream: routing mode (streamed serve, >= 2 hops)", [
+        "scenario", "routing", "max_hops_back", "ttft_steps", "ttft_s",
+        "total_s", "arrive_mean", "arrive_p95", "jitter",
+    ])
+    # ``ttft_steps`` is the deterministic time-to-first-token observable:
+    # the router scan steps the FIRST chunk spends in the fabric (hops +
+    # credit stalls).  Wall-clock ``ttft_s``/``total_s`` ride on top of the
+    # CPU simulation's per-dispatch floor (~tens of ms per tick regardless
+    # of scan length), so on this host they understate what the hop
+    # reduction buys on real links.
+    params, cfg, setup_wires = _setup()
+    rng = np.random.default_rng(7)
+    # two traffic shapes: "far-shard" pins every request 2 hops out with a
+    # 6-hop +1-ring return path (the TTFT story — the first token and every
+    # chunk after it ride the short way back under shortest-path routing);
+    # "spread" places one request per shard, so dimension-order return
+    # paths span 1..7 hops while shortest-path caps them at 4 (the
+    # cross-shard time-to-token JITTER story a multi-tenant ingress sees).
+    wires8 = [
+        encode_request(r, [list(map(int, rng.integers(2, cfg.vocab, 8)))])
+        for r in range(8)
+    ]
+    # far-shard runs at credits=1 with two-prompt requests — the
+    # flow-control-constrained regime where the scan length (and
+    # therefore the tick wall time) tracks hop count, so the 6 -> 2
+    # return-path win is visible as wall-clock TTFT
+    scenarios = [
+        ("far-shard", setup_wires, [2] * len(setup_wires), 1),
+        ("spread", wires8, [(r % 7) + 1 for r in range(8)], 4),
+    ]
+    for scen, wires, placement, credits in scenarios:
+        baseline = serve_requests(
+            params, cfg, wires, max_new=max_new, pad_to=PAD_TO, slots=8
+        )
+        fabrics, runners = {}, {}
+        for routing in ("dimension", "shortest"):
+            fabric = Fabric(n_ranks=8, config=FabricConfig(
+                frame_phits=16, credits=credits, routing=routing))
+            fabrics[routing] = fabric
+            kw = dict(max_new=max_new, pad_to=PAD_TO, slots=8,
+                      fabric=fabric, placement=placement)
+
+            def run_once(kw=kw):
+                first, steps = [], []
+                t0 = time.perf_counter()
+                out = serve_requests_streaming(
+                    params, cfg, wires,
+                    on_token=lambda m, j, s, tok:
+                        first.append(time.perf_counter() - t0)
+                        if not first else None,
+                    on_event=lambda ev: steps.append(ev.arrive_step),
+                    **kw,
+                )
+                dt = time.perf_counter() - t0
+                assert out == baseline  # bit-identical under both modes
+                return first[0], dt, steps
+
+            runners[routing] = run_once
+            run_once()  # warm the jit caches
+        # interleave the modes so machine load biases both equally
+        samples = {r: [] for r in runners}
+        for _ in range(5):
+            for r, fn in runners.items():
+                samples[r].append(fn())
+        for routing, runs in samples.items():
+            ttft, total, steps = sorted(runs)[2]  # median by TTFT
+            st = arrive_stats(steps)  # same math as StreamReader's
+            mean, p95, jitter = st["mean"], st["p95"], st["jitter"]
+            ttft_steps = steps[0]  # first chunk's in-fabric latency
+            max_back = max(
+                fabrics[routing].router.route_hops(s, 0)
+                for s in set(placement)
+            )
+            t.add(scen, routing, max_back, ttft_steps, round(ttft, 4),
+                  round(total, 4), round(mean, 2), p95, round(jitter, 2))
+            tag = f"{scen}_{routing}"
+            LAST_METRICS[f"ttft_steps_{tag}"] = ttft_steps
+            LAST_METRICS[f"ttft_{tag}"] = round(ttft, 4)
+            LAST_METRICS[f"total_{tag}"] = round(total, 4)
+            LAST_METRICS[f"arrive_mean_{tag}"] = round(mean, 2)
+            LAST_METRICS[f"arrive_p95_{tag}"] = p95
+            LAST_METRICS[f"jitter_{tag}"] = round(jitter, 2)
+    LAST_METRICS["ttft_routing_speedup"] = round(
+        LAST_METRICS["ttft_far-shard_dimension"]
+        / LAST_METRICS["ttft_far-shard_shortest"], 2
+    )
+    LAST_METRICS["total_routing_speedup"] = round(
+        LAST_METRICS["total_far-shard_dimension"]
+        / LAST_METRICS["total_far-shard_shortest"], 2
+    )
+    LAST_METRICS["jitter_routing_ratio"] = round(
+        LAST_METRICS["jitter_spread_dimension"]
+        / max(LAST_METRICS["jitter_spread_shortest"], 1e-9), 2
+    )
+    return t
+
+
 def bench_overlap() -> Table:
     from repro.launch.serve import serve_requests_streaming
 
@@ -181,9 +296,24 @@ def bench_qos() -> Table:
 
 
 def run() -> List[Table]:
+    LAST_METRICS.clear()
     print("[bench_stream] streamed wires asserted bit-identical to the "
           "batched plane in every row", file=sys.stderr)
-    return [bench_ttft(), bench_overlap(), bench_qos()]
+    tables = [bench_ttft(), bench_routing(), bench_overlap(), bench_qos()]
+    ttfts = {r[0]: r[3] for r in tables[0].rows}
+    LAST_METRICS["ttft_whole_response"] = ttfts.get("whole-response")
+    LAST_METRICS["ttft_streamed_overlap"] = ttfts.get("streamed+overlap")
+    print(f"[bench_stream] routing-mode wins at >= 2 hops: first-token "
+          f"fabric latency {LAST_METRICS['ttft_steps_far-shard_dimension']}"
+          f" -> {LAST_METRICS['ttft_steps_far-shard_shortest']} router "
+          f"steps (whole serve {LAST_METRICS['total_routing_speedup']}x "
+          f"lower wall clock at the far shard); cross-shard arrive jitter "
+          f"{LAST_METRICS['jitter_spread_dimension']} -> "
+          f"{LAST_METRICS['jitter_spread_shortest']} router steps "
+          f"(p95 {LAST_METRICS['arrive_p95_spread_dimension']} -> "
+          f"{LAST_METRICS['arrive_p95_spread_shortest']})",
+          file=sys.stderr)
+    return tables
 
 
 def main() -> None:

@@ -2,17 +2,76 @@
 
 ``python -m benchmarks.run`` prints every table and writes
 ``experiments/benchmarks.csv``.
+
+``python -m benchmarks.run --smoke`` runs the fabric + stream benches only
+and ALSO writes ``BENCH_fabric.json`` / ``BENCH_stream.json`` at the repo
+root — headline metrics (frames/s, far-destination speedup, TTFT, hop
+counts, arrive-step jitter) plus the full tables — so CI can upload them
+and the perf trajectory is tracked across PRs instead of being a fresh
+anecdote every time.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _tables_json(tables) -> list:
+    return [
+        {"name": t.name, "columns": t.columns, "rows": t.rows}
+        for t in tables
+    ]
+
+
+def _run_mod(name: str, mod) -> list:
+    t0 = time.time()
+    tables = mod.run()
+    print(f"[{name}] {time.time()-t0:.1f}s", file=sys.stderr)
+    for tb in tables:
+        print(tb.show())
+        print()
+    return tables
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fabric + stream benches only; write "
+                         "BENCH_fabric.json / BENCH_stream.json at the "
+                         "repo root (CI perf tracking)")
+    args = ap.parse_args()
+
+    from . import bench_fabric, bench_stream
+
+    if args.smoke:
+        all_tables = []
+        for name, mod in (("fabric", bench_fabric), ("stream", bench_stream)):
+            tables = _run_mod(f"bench_{name}", mod)
+            all_tables.extend(tables)
+            out = REPO_ROOT / f"BENCH_{name}.json"
+            out.write_text(json.dumps({
+                "bench": name,
+                "metrics": getattr(mod, "LAST_METRICS", {}),
+                "tables": _tables_json(tables),
+            }, indent=2) + "\n")
+            print(f"wrote {out}", file=sys.stderr)
+        csv_path = REPO_ROOT / "experiments" / "benchmarks.csv"
+        os.makedirs(csv_path.parent, exist_ok=True)
+        with open(csv_path, "w") as f:
+            for tb in all_tables:
+                f.write(tb.csv())
+                f.write("\n")
+        print(f"wrote {csv_path} ({len(all_tables)} tables)")
+        return
+
     from . import bench_fig14, bench_fe_case_study, bench_schema_complexity
-    from . import bench_fabric, bench_pipeline, bench_serve, bench_stream
+    from . import bench_pipeline, bench_serve
 
     mods = [
         ("fig14 (throughput vs optimum)", bench_fig14),
@@ -25,13 +84,7 @@ def main() -> None:
     ]
     tables = []
     for name, mod in mods:
-        t0 = time.time()
-        got = mod.run()
-        tables.extend(got)
-        print(f"[{name}] {time.time()-t0:.1f}s", file=sys.stderr)
-        for tb in got:
-            print(tb.show())
-            print()
+        tables.extend(_run_mod(name, mod))
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/benchmarks.csv", "w") as f:
         for tb in tables:

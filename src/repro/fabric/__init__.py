@@ -16,6 +16,7 @@ Layers (each importable on its own):
 * ``mailbox`` — host-side message API over the router.
 """
 from .frames import (
+    ADAPTIVE_BIT,
     FRAME_PHITS,
     HDR_WORDS,
     MAX_RANKS,
@@ -27,6 +28,7 @@ from .frames import (
     frame_parts_batch,
     frame_stream,
     pack_route,
+    route_adaptive,
     route_dst,
     route_seq,
     route_src,
@@ -38,9 +40,10 @@ from .mailbox import Delivery, Fabric, Mailbox
 from .router import FabricConfig, Router
 
 __all__ = [
-    "FRAME_PHITS", "HDR_WORDS", "MAX_RANKS", "PHIT_WORDS", "SEQ_MOD",
-    "crc32_words", "frame_capacity", "frame_parts", "frame_parts_batch",
-    "frame_stream", "pack_route", "route_dst", "route_seq", "route_src",
-    "unframe_stream", "unpack_route", "verify_frames",
+    "ADAPTIVE_BIT", "FRAME_PHITS", "HDR_WORDS", "MAX_RANKS", "PHIT_WORDS",
+    "SEQ_MOD", "crc32_words", "frame_capacity", "frame_parts",
+    "frame_parts_batch", "frame_stream", "pack_route", "route_adaptive",
+    "route_dst", "route_seq", "route_src", "unframe_stream", "unpack_route",
+    "verify_frames",
     "Delivery", "Fabric", "Mailbox", "FabricConfig", "Router",
 ]

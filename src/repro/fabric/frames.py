@@ -9,11 +9,15 @@ extensions live here so every framed path uses ONE implementation:
   (``a+b == b+a``); CRC32 is not.  Implemented slicing-by-4: one 256-entry
   table per input byte lane, one scan step per u32 word, so a whole frame
   checksums in ``frame_words`` sequential steps instead of ``4x`` that.
-* **route word** — the fourth header word becomes ``(src, dst, seq)`` packed
-  ``src:u8 | dst:u8 | seq:u16`` so a frame is self-routing: any hop can read
-  its destination without out-of-band state, and the receiver can reorder
-  interleaved frames per source by ``seq``.  ``seq`` increments per frame
-  (not per message) and wraps at 2**16.
+* **route word** — the fourth header word becomes ``(adaptive, src, dst,
+  seq)`` packed ``adaptive:u1 | src:u7 | dst:u8 | seq:u16`` so a frame is
+  self-routing: any hop can read its destination without out-of-band state,
+  and the receiver can reorder interleaved frames per source by ``seq``.
+  ``seq`` increments per frame (not per message) and wraps at 2**16.  The
+  top ``adaptive`` bit marks a frame as free to take the *shortest* ring
+  direction on each axis (go -1 when the +1 distance exceeds half the
+  ring); with the bit clear the frame rides the legacy +1 ring only, so
+  both routing disciplines coexist on the same wire format.
 
 Frame layout (u32 words)::
 
@@ -91,26 +95,34 @@ def crc32_words(words: jnp.ndarray) -> jnp.ndarray:
 # route word
 # ---------------------------------------------------------------------------
 
-MAX_RANKS = 256  # src/dst are u8 lanes in the route word
+MAX_RANKS = 128  # src is a u7 lane (bit 31 = adaptive flag); dst is u8
 SEQ_MOD = 1 << 16
+ADAPTIVE_BIT = 1 << 31  # route-word flag: frame may take the -1 direction
 
 
-def pack_route(src, dst, seq) -> jnp.ndarray:
-    """(src, dst, seq) -> u32 route word: ``src:u8 | dst:u8 | seq:u16``."""
-    src = jnp.asarray(src, jnp.uint32) & 0xFF
+def pack_route(src, dst, seq, adaptive: bool = False) -> jnp.ndarray:
+    """(src, dst, seq) -> u32 route word ``adaptive:u1|src:u7|dst:u8|seq:u16``.
+
+    ``adaptive`` (static) sets the shortest-path flag: the router may move
+    the frame in the -1 ring direction on an axis when that way is shorter.
+    """
+    src = jnp.asarray(src, jnp.uint32) & 0x7F
     dst = jnp.asarray(dst, jnp.uint32) & 0xFF
     seq = jnp.asarray(seq, jnp.uint32) & 0xFFFF
-    return (src << 24) | (dst << 16) | seq
+    word = (src << 24) | (dst << 16) | seq
+    if adaptive:
+        word = word | jnp.uint32(ADAPTIVE_BIT)
+    return word
 
 
 def unpack_route(word: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     word = jnp.asarray(word, jnp.uint32)
-    return (word >> 24) & 0xFF, (word >> 16) & 0xFF, word & 0xFFFF
+    return (word >> 24) & 0x7F, (word >> 16) & 0xFF, word & 0xFFFF
 
 
 def route_src(frames: jnp.ndarray) -> jnp.ndarray:
     """(…, width) frames -> (…,) src rank (int32)."""
-    return ((frames[..., HDR_ROUTE] >> 24) & 0xFF).astype(jnp.int32)
+    return ((frames[..., HDR_ROUTE] >> 24) & 0x7F).astype(jnp.int32)
 
 
 def route_dst(frames: jnp.ndarray) -> jnp.ndarray:
@@ -121,6 +133,11 @@ def route_seq(frames: jnp.ndarray) -> jnp.ndarray:
     return (frames[..., HDR_ROUTE] & 0xFFFF).astype(jnp.int32)
 
 
+def route_adaptive(frames: jnp.ndarray) -> jnp.ndarray:
+    """(…, width) frames -> (…,) bool: shortest-path routing allowed."""
+    return (frames[..., HDR_ROUTE] >> 31) != 0
+
+
 # ---------------------------------------------------------------------------
 # framing / unframing (pure jnp, static frame capacity)
 # ---------------------------------------------------------------------------
@@ -129,9 +146,10 @@ def route_seq(frames: jnp.ndarray) -> jnp.ndarray:
 def frame_parts(
     payload_u32: jnp.ndarray,  # (W,) u32 — serialized list data (padded cap)
     nbytes: jnp.ndarray,  # true byte length (traced)
-    list_level: int = 1,
+    list_level=1,  # int or traced scalar
     frame_phits: int = FRAME_PHITS,
     route: Optional[Tuple] = None,  # (src, dst, seq0) scalars, or None
+    adaptive: bool = False,  # stamp the shortest-path route-word flag
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Structure half of framing: (headers (F, HDR_WORDS), masked payload
     (F, frame_words), n_frames).  ``frame_stream`` concatenates the two; the
@@ -155,9 +173,9 @@ def frame_parts(
     else:
         src, dst, seq0 = route
         seq = (jnp.asarray(seq0, jnp.uint32) + jnp.arange(F, dtype=jnp.uint32)) % SEQ_MOD
-        route_words = pack_route(src, dst, seq)
+        route_words = pack_route(src, dst, seq, adaptive=adaptive)
     sizes = bytes_in.astype(jnp.uint32)
-    levels = jnp.full((F,), list_level, jnp.uint32)
+    levels = jnp.broadcast_to(jnp.asarray(list_level, jnp.uint32), (F,))
     # CRC covers the OTHER header words too (size, level, route) — a flipped
     # size or dst byte must be as detectable as a flipped payload byte
     crc = jax.vmap(crc32_words)(_crc_input(sizes, levels, route_words, data))
@@ -179,6 +197,7 @@ def frame_stream(
     list_level: int = 1,
     frame_phits: int = FRAME_PHITS,
     route: Optional[Tuple] = None,
+    adaptive: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cut a byte stream into frames.
 
@@ -189,7 +208,7 @@ def frame_stream(
     can deliver and reorder it.
     """
     hdr, data, n_frames = frame_parts(
-        payload_u32, nbytes, list_level, frame_phits, route
+        payload_u32, nbytes, list_level, frame_phits, route, adaptive=adaptive
     )
     return jnp.concatenate([hdr, data], axis=1), n_frames
 
@@ -198,16 +217,23 @@ def frame_parts_batch(
     payloads_u32: jnp.ndarray,  # (B, Wcap) u32
     nbytes: jnp.ndarray,  # (B,) int32
     routes: jnp.ndarray,  # (B, 3) int32 — (src, dst, seq0) per stream
-    list_level: int = 1,
+    list_level=1,  # int, or (B,) per-stream ListLevels (traced)
     frame_phits: int = FRAME_PHITS,
+    adaptive: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Batched ``frame_parts`` for multi-destination sends: one vectorized
-    structure pass over B streams.  Returns (headers (B, F, HDR_WORDS),
-    payload (B, F, frame_words), n_frames (B,))."""
-    fn = lambda p, nb, r: frame_parts(
-        p, nb, list_level, frame_phits, route=(r[0], r[1], r[2])
+    structure pass over B streams.  ``list_level`` may be a (B,) array so a
+    mixed-tenant burst serializes in ONE pass (the fused tick path).
+    Returns (headers (B, F, HDR_WORDS), payload (B, F, frame_words),
+    n_frames (B,))."""
+    B = payloads_u32.shape[0]
+    levels = jnp.broadcast_to(jnp.asarray(list_level, jnp.uint32), (B,))
+    fn = lambda p, nb, r, lv: frame_parts(
+        p, nb, lv, frame_phits, route=(r[0], r[1], r[2]), adaptive=adaptive
     )
-    return jax.vmap(fn)(payloads_u32, jnp.asarray(nbytes), jnp.asarray(routes))
+    return jax.vmap(fn)(
+        payloads_u32, jnp.asarray(nbytes), jnp.asarray(routes), levels
+    )
 
 
 def verify_frames(frames: jnp.ndarray) -> jnp.ndarray:

@@ -6,9 +6,13 @@ semantics.  A :class:`Fabric` owns one router over a device mesh plus one
 
 * ``Mailbox.send(dst, wire)`` queues a whole serialized HGum message for
   any rank.  At :meth:`Fabric.exchange` time every pending send across all
-  ranks is framed in ONE batched SER pass (``kernels.ops.encode_frames_batch``
-  — vectorized structure pass + Pallas assembly), routed by the device-side
-  router (multi-hop ppermute, credit flow control), and reassembled here.
+  ranks is framed in ONE batched SER pass, routed by the device-side
+  router (multi-hop ppermute, credit flow control), and reassembled here —
+  by default framing/routing/RX-split fuse into a single jitted program
+  (``Router.deliver_fused``); with ``FabricConfig(fused=False)`` or a
+  ``tx_hook`` the PR-2/PR-3 three-program path runs instead
+  (``kernels.ops.encode_frames_batch`` + ``Router.deliver`` +
+  ``kernels.ops.decode_frames_batch``).
 * ``Mailbox.recv()`` drains delivered messages as :class:`Delivery` records.
   Frames from different sources interleave freely on the links; the receiver
   re-orders each source's frames by the route word's ``seq`` (wrap-aware —
@@ -36,9 +40,26 @@ Two tick styles:
   plane drives exactly this pipeline).  At most one tick is in flight;
   ``exchange_async`` completes the previous one first, so message order per
   (src, dst) stream is preserved.
+
+Two tick engines (``FabricConfig.fused``):
+
+* **fused** (default): the whole tick — batched framing, TX scatter, the
+  routed scan, and the RX split — is ONE jitted program
+  (``Router.deliver_fused``).  Frames stay on device end to end; the host
+  only computes the tiny scatter index tables and reads bytes back at
+  reassembly time.  Tick shapes are pow2-bucketed and the resolved jitted
+  callable is memoized per bucket on the Fabric, so steady-state serving
+  is a dict lookup + one dispatch per tick; a tick that falls into a NEW
+  bucket logs once (``repro.fabric.mailbox`` logger) because it implies an
+  XLA recompile — silence there means no recompiles.
+* **three-program** (``fused=False``, or whenever ``tx_hook`` is set): the
+  PR-2/PR-3 path — framing jit, host scatter, router jit, RX-split jit —
+  kept as the fault-injection point and the regression oracle the fused
+  tick is tested bit-identical against.
 """
 from __future__ import annotations
 
+import logging
 import zlib
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
@@ -59,6 +80,8 @@ from .frames import (
     frame_capacity,
 )
 from .router import FabricConfig, Router
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass
@@ -116,6 +139,10 @@ class Fabric:
         self._inbox: List[List[Delivery]] = [[] for _ in range(R)]
         #: the dispatched-but-not-reassembled tick (device arrays + counts)
         self._inflight: Optional[Tuple] = None
+        #: tick-shape buckets seen so far — a tick landing in a new bucket
+        #: implies an XLA compile, which steady-state serving must not do
+        #: silently (logged once per bucket).
+        self._tick_buckets: set = set()
         self.frames_routed = 0
         self.exchanges = 0
         #: fault-injection hook for tests/chaos: (tx, tx_valid) -> tx, applied
@@ -199,16 +226,90 @@ class Fabric:
         for i, (src, dst, _, _) in enumerate(sends):
             routes[i] = (src, dst, self._tx_seq[src][dst])
             self._tx_seq[src][dst] = (self._tx_seq[src][dst] + n_live[i]) % SEQ_MOD
+
+        if self.config.fused and self.tx_hook is None:
+            self._dispatch_fused(sends, n_live, payloads, nbytes, routes,
+                                 F_arr)
+        else:
+            fill = [0] * self.n_ranks
+            for i, (src, _, _, _) in enumerate(sends):
+                fill[src] += n_live[i]
+            T = max(1, max(fill))
+            T = 1 << (T - 1).bit_length()  # bucket for router jit reuse
+            total = self.router.bucket_total(sum(n_live), T)
+            self._dispatch_programs(
+                sends, n_live, payloads, nbytes, routes, T, total,
+                pf, frame_words,
+            )
+        self.exchanges += 1
+        return True
+
+    def _dispatch_fused(
+        self, sends, n_live, payloads, nbytes, routes, F_arr: int
+    ) -> None:
+        """One-jit tick (``Router.deliver_fused``): sends are grouped by
+        source rank on the host (tiny tables), then framing, TX layout, the
+        routed scan, and the RX split all run per-device inside one
+        ``jax.jit(shard_map(...))`` — frames never touch host memory between
+        the stages.  The scan bound comes from the tick's actual demand
+        (``Router.plan_steps``), not the all-to-all worst case."""
+        R = self.n_ranks
+        per_rank: List[List[int]] = [[] for _ in range(R)]
+        for i, (src, _, _, _) in enumerate(sends):
+            per_rank[src].append(i)
+        Bmax = max(1, max(len(p) for p in per_rank))
+        Bmax = 1 << (Bmax - 1).bit_length()  # pow2-bucket sends per rank
+        Wcap = payloads.shape[1]
+        p_r = np.zeros((R, Bmax, Wcap), np.uint32)
+        nb_r = np.zeros((R, Bmax), np.int32)
+        rt_r = np.zeros((R, Bmax, 3), np.int32)
+        lv_r = np.zeros((R, Bmax), np.uint32)
+        sv_r = np.zeros((R, Bmax), bool)
+        for r, idxs in enumerate(per_rank):
+            for j, i in enumerate(idxs):
+                p_r[r, j] = payloads[i]
+                nb_r[r, j] = nbytes[i]
+                rt_r[r, j] = routes[i]
+                lv_r[r, j] = sends[i][3]
+                sv_r[r, j] = True
+        T = Bmax * F_arr
+        # finer-grained bucket than the three-program path's pow2: the
+        # fused jit key is already demand-differentiated by axis_steps, so
+        # a 32-frame granularity adds few compiles but keeps the queue
+        # (q_cap scales with total) near the tick's real size
+        total = min(-(-sum(n_live) // 32) * 32, R * T)
+        axis_steps = self.router.plan_steps(
+            [s for s, _, _, _ in sends], [d for _, d, _, _ in sends], n_live
+        )
+        self._note_bucket(("fused", Bmax, Wcap, axis_steps, total))
+        out = self.router.deliver_fused(
+            p_r, nb_r, rt_r, lv_r, sv_r, axis_steps=axis_steps, total=total
+        )
+        self._inflight = ("fused",) + out
+
+    def _dispatch_programs(
+        self, sends, n_live, payloads, nbytes, routes, T: int, total: int,
+        pf: int, frame_words: int,
+    ) -> None:
+        """The PR-2/PR-3 three-program tick (framing jit -> host scatter ->
+        router jit; RX split happens at completion).  Kept for fault
+        injection (``tx_hook`` needs the framed TX on host) and as the
+        regression oracle for the fused tick."""
+        B = len(sends)
+        F_arr = pf + 1
+        adaptive = self.config.adaptive
         levels = {lvl for _, _, _, lvl in sends}
         if len(levels) == 1:
             frames = self._encode_bucketed(payloads, nbytes, routes,
-                                           levels.pop(), phits)
+                                           levels.pop(), self.config.frame_phits,
+                                           adaptive)
         else:  # mixed levels: one batched pass per level, scatter back
             frames = np.zeros((B, F_arr, HDR_WORDS + frame_words), np.uint32)
             for lvl in sorted(levels):
                 idx = [i for i, s in enumerate(sends) if s[3] == lvl]
                 frames[idx] = self._encode_bucketed(
-                    payloads[idx], nbytes[idx], routes[idx], lvl, phits
+                    payloads[idx], nbytes[idx], routes[idx], lvl,
+                    self.config.frame_phits, adaptive,
                 )
 
         # scatter live frames into per-rank tx rows
@@ -216,8 +317,6 @@ class Fabric:
         rows: List[List[np.ndarray]] = [[] for _ in range(R)]
         for i, (src, _, _, _) in enumerate(sends):
             rows[src].extend(frames[i, : n_live[i]])
-        T = max(1, max(len(r) for r in rows))
-        T = 1 << (T - 1).bit_length()  # bucket so the router jit is reused
         tx = np.zeros((R, T, HDR_WORDS + frame_words), np.uint32)
         tx_valid = np.zeros((R, T), bool)
         for r, fr in enumerate(rows):
@@ -227,12 +326,19 @@ class Fabric:
 
         if self.tx_hook is not None:
             tx = np.asarray(self.tx_hook(tx, tx_valid))
+        self._note_bucket(("programs", T, total))
         out = self.router.deliver(
-            jnp.asarray(tx), jnp.asarray(tx_valid), total_frames=sum(n_live)
+            jnp.asarray(tx), jnp.asarray(tx_valid), total_frames=total
         )
-        self._inflight = out
-        self.exchanges += 1
-        return True
+        self._inflight = ("frames",) + out
+
+    def _note_bucket(self, key: Tuple) -> None:
+        """Record the tick's jit-shape bucket; log ONCE when it is new (a
+        new bucket means an XLA compile — steady-state serving should
+        never see this line after warmup)."""
+        if key not in self._tick_buckets:
+            self._tick_buckets.add(key)
+            logger.info("fabric tick compiled for new shape bucket %s", key)
 
     def poll(self) -> bool:
         """Complete the in-flight async tick, reassembling its messages into
@@ -244,9 +350,14 @@ class Fabric:
 
     def _complete(self) -> None:
         """RX readback + reassembly of the in-flight tick (the host half of
-        the exchange, deferred by ``exchange_async``)."""
-        rx, rx_cnt, ok, crc_ok, rx_step = self._inflight
+        the exchange, deferred by ``exchange_async``).  This is the ONLY
+        point where delivered frames are materialized as host bytes."""
+        kind, *out = self._inflight
         self._inflight = None
+        if kind == "fused":  # RX split already happened inside the tick jit
+            rx_hdr, rx_pay, rx_cnt, ok, crc_ok, rx_step = out
+        else:
+            rx, rx_cnt, ok, crc_ok, rx_step = out
         self.last_crc_ok = bool(np.all(np.asarray(crc_ok)))
         if not bool(np.all(np.asarray(ok))):
             raise RuntimeError(
@@ -254,16 +365,21 @@ class Fabric:
                 "overflow) — check ranks and FabricConfig capacities"
             )
         self.frames_routed += int(np.sum(np.asarray(rx_cnt)))
-        rx = np.asarray(rx)
         rx_step = np.asarray(rx_step)
         counts = [int(c) for c in np.asarray(rx_cnt)]
         if not any(counts):
             return
-        # RX split on the Pallas kernel twin: one batched call separates
-        # every delivered frame into header + payload rows
-        flat = np.concatenate([rx[r, :c] for r, c in enumerate(counts) if c])
         steps = np.concatenate([rx_step[r, :c] for r, c in enumerate(counts) if c])
-        hdrs, pays = self._split_bucketed(flat)
+        if kind == "fused":
+            rx_hdr, rx_pay = np.asarray(rx_hdr), np.asarray(rx_pay)
+            hdrs = np.concatenate([rx_hdr[r, :c] for r, c in enumerate(counts) if c])
+            pays = np.concatenate([rx_pay[r, :c] for r, c in enumerate(counts) if c])
+        else:
+            # RX split on the Pallas kernel twin: one batched call separates
+            # every delivered frame into header + payload rows
+            rx = np.asarray(rx)
+            flat = np.concatenate([rx[r, :c] for r, c in enumerate(counts) if c])
+            hdrs, pays = self._split_bucketed(flat)
         off = 0
         for r, c in enumerate(counts):
             if c:
@@ -274,7 +390,8 @@ class Fabric:
                 off += c
 
     @staticmethod
-    def _encode_bucketed(payloads, nbytes, routes, list_level, phits):
+    def _encode_bucketed(payloads, nbytes, routes, list_level, phits,
+                         adaptive=False):
         """Batched SER with the stream count padded to a pow2 bucket, so
         varying burst sizes reuse the jitted framing pass."""
         # deferred: kernels.frame_pack imports fabric.frames (no cycle at
@@ -289,7 +406,7 @@ class Fabric:
             routes = np.pad(routes, ((0, Bp - B), (0, 0)))
         frames, _ = encode_frames_batch(
             jnp.asarray(payloads), jnp.asarray(nbytes), jnp.asarray(routes),
-            list_level=list_level, frame_phits=phits,
+            list_level=list_level, frame_phits=phits, adaptive=adaptive,
         )
         return np.asarray(frames[:B])
 
@@ -316,7 +433,7 @@ class Fabric:
         the end-of-list terminators."""
         if steps is None:
             steps = np.zeros(len(hdrs), np.int32)
-        srcs = (hdrs[:, HDR_ROUTE] >> 24) & 0xFF
+        srcs = (hdrs[:, HDR_ROUTE] >> 24) & 0x7F  # bit 31 = adaptive flag
         for src in sorted(set(int(s) for s in srcs)):
             sel = srcs == src
             mh, mp, ms = hdrs[sel], pays[sel], steps[sel]

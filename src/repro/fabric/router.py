@@ -13,10 +13,22 @@ Topology and algorithm
 * Ranks are the row-major flattening of the mesh coordinates along
   ``axis_names`` (so a ``(4, 2)`` x/y mesh has ``rank = x*2 + y``).
 * **Dimension-ordered routing**: frames first travel along the first axis
-  (+1 ring direction) until their destination coordinate on that axis
-  matches, then along the next axis, and so on — deadlock-free and
-  deterministic, the standard mesh/torus discipline.
-* **Credit-based flow control**: each link carries at most
+  until their destination coordinate on that axis matches, then along the
+  next axis, and so on — deadlock-free and deterministic, the standard
+  mesh/torus discipline.
+* **Shortest-path direction choice** (``config.routing = "shortest"``, the
+  default): on each axis a frame whose +1 distance exceeds half the ring
+  takes the -1 direction instead, so the worst case halves from ``n - 1``
+  hops to ``n // 2``.  Every scan step moves BOTH directions (two
+  ``ppermute``s over disjoint link buffers), each direction with its own
+  ``credits`` budget and its own QoS weighted-round-robin pass — a
+  bidirectional ring has twice the link capacity of the +1 ring, and the
+  scheduler treats each physical direction as the independent link it is.
+  The choice is per *frame*: the route word's adaptive bit (``frames.py``)
+  gates it, so legacy +1-only frames and shortest-path frames coexist in
+  one tick.  ``routing = "dimension"`` keeps the PR-2/PR-3 +1-ring
+  discipline bit-for-bit.
+* **Credit-based flow control**: each directed link carries at most
   ``config.credits`` frames per step (the paper's bounded-BRAM
   back-pressure analog).  Frames that cannot be injected wait in a
   per-device queue; transiting frames have priority over fresh injections,
@@ -27,15 +39,29 @@ Topology and algorithm
   ``ListLevel`` (``class = level % n_classes``).  Each class holds a static
   quota of the link credits (largest-remainder split of the weights) and
   unused quota spills to the other classes in queue order, so the scheduler
-  stays work-conserving: a noisy tenant saturating a link cannot starve
-  another tenant's frames, yet idle classes cost nothing.  ``deliver``
-  additionally reports the scan step at which every frame arrived
-  (``rx_step``), which makes in-tick queueing delay — and therefore
-  starvation — observable to the mailbox layer.
-* Every step is one ``ppermute`` of a ``(credits, width)`` link buffer
-  inside a ``lax.scan``; the step count is a static worst-case bound
-  (pipeline fill + total frames over the busiest possible link), so the
-  whole delivery jits to one XLA program with no host round-trips.
+  stays work-conserving.  ``deliver`` additionally reports the scan step at
+  which every frame arrived (``rx_step``), which makes in-tick queueing
+  delay — and therefore starvation — observable to the mailbox layer.
+* Every step is one ``ppermute`` per active direction of a
+  ``(credits, width)`` link buffer inside a ``lax.scan``; the step count is
+  a static worst-case bound (pipeline fill + frames over the busiest
+  possible link), so the whole delivery jits to one XLA program with no
+  host round-trips.  :meth:`Router.plan_steps` tightens the bound from the
+  tick's *actual* demand (per-ring directed link loads and true hop
+  distances) and reports which directions each axis really uses, so a
+  one-destination burst does not pay for the all-to-all worst case — and an
+  axis nobody crosses costs zero scan steps.
+
+Two delivery entry points:
+
+* :meth:`Router.deliver` — takes already-framed ``(ranks, T, width)`` TX
+  buffers (the PR-2/PR-3 three-program path; ``mailbox.py`` frames on a
+  separate jit and scatters on host).
+* :meth:`Router.deliver_fused` — the whole tick as ONE jitted program:
+  batched framing (structure pass + Pallas assembly), device-side scatter
+  into per-rank TX rows, the routed scan, and the Pallas RX split all fuse
+  into a single ``jax.jit``, so frames never bounce through host memory
+  between the three stages.
 
 The router works on *stacked* buffers — ``tx`` is ``(ranks, T, width)``
 sharded over the mesh axes — matching the repo's shard_map test idiom.
@@ -45,6 +71,7 @@ live in ``mailbox.py``.
 from __future__ import annotations
 
 import math
+from collections import Counter
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
@@ -59,9 +86,13 @@ from .frames import (
     HDR_WORDS,
     MAX_RANKS,
     PHIT_WORDS,
+    route_adaptive,
     route_dst,
     verify_frames,
 )
+
+#: direction masks for plan_steps / the per-axis scan builder
+DIR_FWD, DIR_BWD = 1, 2
 
 
 @dataclass(frozen=True)
@@ -69,17 +100,30 @@ class FabricConfig:
     """Knobs of the routed fabric."""
 
     frame_phits: int = 16  # payload phits per frame
-    credits: int = 4  # max in-flight frames per link per step
+    credits: int = 4  # max in-flight frames per directed link per step
     rx_frames: Optional[int] = None  # per-rank delivery capacity (default R*T)
     #: weighted round-robin credit classes at the inject step, keyed by
     #: ``ListLevel % len(qos_weights)``.  None = single-class FIFO (legacy).
     qos_weights: Optional[Tuple[int, ...]] = None
+    #: "shortest" = per-frame direction choice (go -1 when it is the shorter
+    #: way around the ring); "dimension" = the legacy +1-only discipline.
+    routing: str = "shortest"
+    #: run the tick as one fused jit (pack -> route -> RX split) instead of
+    #: three programs with host syncs between them.  The three-program path
+    #: remains for fault injection (``Fabric.tx_hook``) and as the
+    #: regression oracle.
+    fused: bool = True
 
     def __post_init__(self) -> None:
         if self.frame_phits < 1 or self.credits < 1:
             raise ValueError(
                 f"frame_phits/credits must be >= 1, got "
                 f"{self.frame_phits}/{self.credits}"
+            )
+        if self.routing not in ("shortest", "dimension"):
+            raise ValueError(
+                f"routing must be 'shortest' or 'dimension', got "
+                f"{self.routing!r}"
             )
         if self.qos_weights is not None:
             if len(self.qos_weights) < 1 or any(
@@ -98,6 +142,10 @@ class FabricConfig:
     @property
     def frame_width(self) -> int:
         return HDR_WORDS + self.frame_phits * PHIT_WORDS
+
+    @property
+    def adaptive(self) -> bool:
+        return self.routing == "shortest"
 
 
 def qos_quotas(credits: int, weights: Sequence[int]) -> Tuple[int, ...]:
@@ -120,12 +168,20 @@ def qos_quotas(credits: int, weights: Sequence[int]) -> Tuple[int, ...]:
     return tuple(int(x) for x in q)
 
 
-def _compact(buf: jnp.ndarray, valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Stable-move valid rows to the front (order-preserving)."""
-    n = buf.shape[0]
-    idx = jnp.arange(n)
-    order = jnp.argsort(jnp.where(valid, idx, idx + n))
-    return buf[order], valid[order]
+def _compact_to(valid: jnp.ndarray, cap: int, *cols):
+    """Stable partition: scatter valid rows (order-preserving) to the front
+    of fresh ``cap``-row buffers.  One cumsum + one scatter per column —
+    O(n), replacing the old O(n log n) argsort — and rows past ``cap`` are
+    dropped (reported via the overflow flag) instead of silently kept.
+    Returns (valid', cols', overflow)."""
+    pos = jnp.where(valid, jnp.cumsum(valid) - 1, cap)
+    out_valid = jnp.zeros((cap,), bool).at[pos].set(valid, mode="drop")
+    outs = tuple(
+        jnp.zeros((cap,) + c.shape[1:], c.dtype).at[pos].set(c, mode="drop")
+        for c in cols
+    )
+    overflow = jnp.sum(valid) > cap
+    return out_valid, outs, overflow
 
 
 def _append(rx, rx_cnt, rx_step, ok, frames, take, step_no):
@@ -154,9 +210,10 @@ class Router:
         self.sizes = tuple(mesh.shape[a] for a in self.axis_names)
         self.n_ranks = math.prod(self.sizes)
         if self.n_ranks > MAX_RANKS:
-            raise ValueError(f"route word holds u8 ranks; got {self.n_ranks}")
+            raise ValueError(f"route word holds u7 ranks; got {self.n_ranks}")
         self.config = config
         self._jitted = {}
+        self._fused = {}
 
     # -- coordinate helpers (row-major rank <-> per-axis coords) ----------
 
@@ -166,13 +223,114 @@ class Router:
     def _coord(self, rank: jnp.ndarray, ai: int) -> jnp.ndarray:
         return (rank // self._stride(ai)) % self.sizes[ai]
 
+    def _coord_int(self, rank: int, ai: int) -> int:
+        return (rank // self._stride(ai)) % self.sizes[ai]
+
     def hops(self, src: int, dst: int) -> int:
-        """Total +1-ring hops a frame takes from src to dst."""
+        """Total +1-ring (dimension-order) hops from src to dst.
+
+        Pure host integer math — ``place_requests`` calls this per request,
+        so it must not build device arrays or force a sync.
+        """
         return sum(
-            (self._coord(jnp.asarray(dst), ai) - self._coord(jnp.asarray(src), ai))
-            % n
+            (self._coord_int(dst, ai) - self._coord_int(src, ai)) % n
             for ai, n in enumerate(self.sizes)
-        ).item()
+        )
+
+    def min_hops(self, src: int, dst: int) -> int:
+        """Total hops under shortest-path routing (per-axis min of the two
+        ring directions) — what a ``routing="shortest"`` frame traverses."""
+        total = 0
+        for ai, n in enumerate(self.sizes):
+            d = (self._coord_int(dst, ai) - self._coord_int(src, ai)) % n
+            total += min(d, n - d)
+        return total
+
+    def route_hops(self, src: int, dst: int) -> int:
+        """Hops under THIS router's configured routing mode (placement must
+        rank shards by the distance frames actually travel)."""
+        if self.config.adaptive:
+            return self.min_hops(src, dst)
+        return self.hops(src, dst)
+
+    # -- demand-aware scan bounds -----------------------------------------
+
+    def default_steps(self, total: int) -> Tuple[Tuple[int, int], ...]:
+        """Worst-case per-axis (steps, dirs): every live frame crosses the
+        busiest link and needs the full pipeline fill.  Shortest-path halves
+        the fill term (max hops per axis drop from ``n`` to ``n // 2``)."""
+        credits = self.config.credits
+        out = []
+        for n in self.sizes:
+            if n == 1:
+                out.append((0, 0))
+                continue
+            if self.config.adaptive:
+                fill, dirs = n // 2, DIR_FWD | DIR_BWD
+            else:
+                fill, dirs = n, DIR_FWD
+            out.append((-(-total // credits) + fill + 1, dirs))
+        return tuple(out)
+
+    def plan_steps(
+        self,
+        srcs: Sequence[int],
+        dsts: Sequence[int],
+        counts: Sequence[int],
+    ) -> Tuple[Tuple[int, int], ...]:
+        """Per-axis (scan steps, direction mask) from the tick's ACTUAL
+        demand — pure host numpy, no device work.
+
+        Frames route dimension-ordered, so while a frame crosses axis ``ai``
+        its other coordinates are pinned (axes before ``ai`` already at the
+        destination, axes after still at the source); that tuple names the
+        physical ring the frame rides.  Frames on different rings — or
+        moving in opposite directions on one ring — never compete for a
+        link, so the busiest-contention-set bound is per (ring, direction):
+        ``ceil(group_frames / credits) + group_max_hops + 1``.  The result
+        is never looser than :meth:`default_steps` and is rounded up to an
+        even step count so nearby traffic shapes share a jit cache entry.
+        An axis no frame crosses costs 0 steps (skipped entirely), and a
+        direction no frame takes skips its ppermute.
+        """
+        credits = self.config.credits
+        adaptive = self.config.adaptive
+        defaults = self.default_steps(sum(counts))
+        out = []
+        for ai, n in enumerate(self.sizes):
+            if n == 1:
+                out.append((0, 0))
+                continue
+            stride = self._stride(ai)
+            group = Counter()
+            max_hops = {}
+            for s, d, cnt in zip(srcs, dsts, counts):
+                sc = (s // stride) % n
+                dc = (d // stride) % n
+                fwd = (dc - sc) % n
+                if fwd == 0 or cnt == 0:
+                    continue
+                # ring id: axes < ai at dst coords, axes > ai at src coords
+                ring = (d // (stride * n), s % stride)
+                if adaptive and fwd > n // 2:
+                    key, hops_ = (ring, DIR_BWD), n - fwd
+                else:
+                    key, hops_ = (ring, DIR_FWD), fwd
+                group[key] += cnt
+                max_hops[key] = max(max_hops.get(key, 0), hops_)
+            if not group:
+                out.append((0, 0))
+                continue
+            steps = max(
+                -(-load // credits) + max_hops[k] + 1
+                for k, load in group.items()
+            )
+            steps = min(steps + (steps % 2), defaults[ai][0])  # even bucket
+            dirs = 0
+            for (_, dmask) in group:
+                dirs |= dmask
+            out.append((steps, dirs))
+        return tuple(out)
 
     # -- delivery ----------------------------------------------------------
 
@@ -202,35 +360,77 @@ class Router:
                 f"tx shape {tx.shape} vs ranks={self.n_ranks}, "
                 f"width={self.config.frame_width}"
             )
-        total = min(total_frames or R * T, R * T)
-        if total < R * T:  # bucket so the jit cache is reused across ticks
-            total = min(1 << max(total - 1, 0).bit_length(), R * T)
+        total = self.bucket_total(total_frames, T)
         key = (T, total)
         fn = self._jitted.get(key)
         if fn is None:
             fn = self._jitted[key] = self._build(T, total)
         return fn(tx, tx_valid)
 
+    def bucket_total(self, total_frames: Optional[int], T: int) -> int:
+        """Pow2-bucket the live-frame bound so the jit cache is reused
+        across ticks (idempotent: feeding a bucketed value back is a
+        no-op — the Mailbox memoizes on exactly this value)."""
+        R = self.n_ranks
+        total = min(total_frames or R * T, R * T)
+        if total < R * T:
+            total = min(1 << max(total - 1, 0).bit_length(), R * T)
+        return total
+
+    def _capacities(self, T: int, total: int) -> Tuple[int, int]:
+        """(rx_cap, q_cap) for a tick of ``total`` live frames and per-rank
+        TX depth ``T`` — ONE derivation shared by the fused and
+        three-program builders, so the two paths always agree on queue/RX
+        sizing (the bit-identity regression tests rely on that)."""
+        cfg = self.config
+        rx_cap = cfg.rx_frames or min(self.n_ranks * T, total)
+        arrivals = cfg.credits * (2 if cfg.adaptive else 1)
+        return rx_cap, max(total, T) + arrivals
+
     def _build(self, T: int, total: int):
+        axis_steps = self.default_steps(total)
+        rx_cap, q_cap = self._capacities(T, total)
+        local = self._build_local(T, axis_steps, q_cap, rx_cap)
+        spec = P(self.axis_names)
+        return jax.jit(
+            shard_map(
+                local,
+                mesh=self.mesh,
+                in_specs=(spec, spec),
+                out_specs=(spec, spec, spec, spec, spec),
+                check_rep=False,
+            )
+        )
+
+    def _build_local(
+        self,
+        T: int,
+        axis_steps: Tuple[Tuple[int, int], ...],
+        q_cap: int,
+        rx_cap: int,
+    ):
+        """The per-device routing program: inject/hop/deliver scan per axis.
+
+        ``axis_steps`` is a static (steps, direction-mask) per axis —
+        ``plan_steps`` output for demand-tight ticks, ``default_steps`` for
+        the worst case.  A 0-step axis is skipped entirely; a direction
+        absent from the mask skips its ppermute.
+        """
         cfg = self.config
         W = cfg.frame_width
-        R = self.n_ranks
         credits = cfg.credits
-        rx_cap = cfg.rx_frames or min(R * T, total)
-        # worst case: every live frame parks at one rank
-        q_cap = max(total, T) + credits
         axes = self.axis_names
         quotas = (
             qos_quotas(credits, cfg.qos_weights) if cfg.qos_weights else None
         )
 
-        def select(queue, elig):
-            """Pick this step's link occupants: FIFO, or weighted
+        def select(levels, elig):
+            """Pick one direction's link occupants: FIFO, or weighted
             round-robin over ListLevel credit classes (work-conserving —
             quota a class leaves unused spills to the others)."""
             if quotas is None:
                 return elig & (jnp.cumsum(elig) <= credits)
-            cls = queue[:, HDR_LEVEL].astype(jnp.int32) % len(quotas)
+            cls = levels.astype(jnp.int32) % len(quotas)
             take = jnp.zeros_like(elig)
             for c, qc in enumerate(quotas):
                 in_c = elig & (cls == c)
@@ -238,6 +438,18 @@ class Router:
             rest = elig & ~take
             spill = credits - jnp.sum(take)
             return take | (rest & (jnp.cumsum(rest) <= spill))
+
+        def hop(queue, take, axis, perm):
+            """Scatter this direction's occupants into the link buffer and
+            move it one hop."""
+            pos = jnp.where(take, jnp.cumsum(take) - 1, credits)
+            link = jnp.zeros((credits, W), jnp.uint32).at[pos].set(
+                queue, mode="drop"
+            )
+            lvalid = jnp.zeros((credits,), bool).at[pos].set(take, mode="drop")
+            arr = jax.lax.ppermute(link, axis, perm)
+            avalid = jax.lax.ppermute(lvalid, axis, perm)
+            return arr, avalid
 
         def local(tx, tx_valid):  # (1, T, W), (1, T) — one device's view
             coords = [jax.lax.axis_index(a) for a in axes]
@@ -263,58 +475,86 @@ class Router:
 
             for ai, axis in enumerate(axes):
                 n_axis = self.sizes[ai]
-                if n_axis == 1:
+                steps, dirs = axis_steps[ai]
+                if n_axis == 1 or steps == 0:
                     continue
-                perm = [(i, (i + 1) % n_axis) for i in range(n_axis)]
-                # worst case every live frame crosses the busiest link, plus
-                # pipeline fill around the ring (QoS keeps the per-step link
-                # capacity at `credits`, so the bound is scheduler-agnostic)
-                steps = -(-total // credits) + n_axis + 1
+                fwd_perm = [(i, (i + 1) % n_axis) for i in range(n_axis)]
+                bwd_perm = [(i, (i - 1) % n_axis) for i in range(n_axis)]
+                myc = coords[ai]
+                half = n_axis // 2
+                use_fwd = bool(dirs & DIR_FWD)
+                use_bwd = bool(dirs & DIR_BWD)
+                # hoisted: the per-frame scheduling keys (destination coord
+                # on this axis, ListLevel class, adaptive flag) are computed
+                # ONCE for the resident queue and only for the <= arrivals
+                # rows each step, instead of re-derived for all q_cap rows
+                # every step.
+                qdst = self._coord(route_dst(queue), ai).astype(jnp.int32)
+                qlvl = queue[:, HDR_LEVEL]
+                qadp = route_adaptive(queue)
 
-                def step(carry, _):
-                    queue, qvalid, rx, rx_cnt, rx_step, ok, step_no = carry
+                def step(carry, _, ai=ai, axis=axis, n_axis=n_axis,
+                         myc=myc, half=half, use_fwd=use_fwd,
+                         use_bwd=use_bwd, fwd_perm=fwd_perm,
+                         bwd_perm=bwd_perm):
+                    (queue, qdst, qlvl, qadp, qvalid,
+                     rx, rx_cnt, rx_step, ok, step_no) = carry
                     step_no = step_no + 1
                     # inject: frames still off-coordinate on this axis, up
-                    # to `credits` per step, scheduled by `select` (transit
-                    # priority comes from arrivals being re-queued at the
-                    # front below)
-                    dstc = self._coord(route_dst(queue), ai)
-                    elig = qvalid & (dstc != coords[ai])
-                    take = select(queue, elig)
-                    rank1 = jnp.cumsum(take)
-                    pos = jnp.where(take, rank1 - 1, credits)
-                    link = jnp.zeros((credits, W), jnp.uint32).at[pos].set(
-                        queue, mode="drop"
+                    # to `credits` per direction per step, scheduled by
+                    # `select` (transit priority comes from arrivals being
+                    # re-queued at the front below)
+                    fwd = (qdst - myc) % n_axis
+                    elig = qvalid & (fwd != 0)
+                    go_bwd = qadp & (fwd > half) if use_bwd else (
+                        jnp.zeros_like(elig)
                     )
-                    lvalid = jnp.zeros((credits,), bool).at[pos].set(
-                        take, mode="drop"
-                    )
-                    qvalid = qvalid & ~take
-                    # one hop
-                    arr = jax.lax.ppermute(link, axis, perm)
-                    avalid = jax.lax.ppermute(lvalid, axis, perm)
+                    arrs, avalids = [], []
+                    if use_fwd:
+                        take_f = select(qlvl, elig & ~go_bwd)
+                        arr_f, av_f = hop(queue, take_f, axis, fwd_perm)
+                        qvalid = qvalid & ~take_f
+                        arrs.append(arr_f)
+                        avalids.append(av_f)
+                    if use_bwd:
+                        take_b = select(qlvl, elig & go_bwd)
+                        arr_b, av_b = hop(queue, take_b, axis, bwd_perm)
+                        qvalid = qvalid & ~take_b
+                        arrs.append(arr_b)
+                        avalids.append(av_b)
+                    arr = jnp.concatenate(arrs)
+                    avalid = jnp.concatenate(avalids)
                     # deliver frames that reached their full destination
                     done = avalid & (route_dst(arr) == me)
                     rx, rx_cnt, rx_step, ok = _append(
                         rx, rx_cnt, rx_step, ok, arr, done, step_no
                     )
-                    # transit frames re-queue at the FRONT (FIFO per path)
-                    comb = jnp.concatenate([arr, queue])
+                    # transit frames re-queue at the FRONT (FIFO per path);
+                    # the hoisted columns ride the same stable partition
                     cvalid = jnp.concatenate([avalid & ~done, qvalid])
-                    comb, cvalid = _compact(comb, cvalid)
-                    ok = ok & ~jnp.any(cvalid[q_cap:])
+                    comb = jnp.concatenate([arr, queue])
+                    cdst = jnp.concatenate([
+                        self._coord(route_dst(arr), ai).astype(jnp.int32),
+                        qdst,
+                    ])
+                    clvl = jnp.concatenate([arr[:, HDR_LEVEL], qlvl])
+                    cadp = jnp.concatenate([route_adaptive(arr), qadp])
+                    qvalid, (queue, qdst, qlvl, qadp), over = _compact_to(
+                        cvalid, q_cap, comb, cdst, clvl, cadp
+                    )
+                    ok = ok & ~over
                     return (
-                        comb[:q_cap], cvalid[:q_cap], rx, rx_cnt, rx_step,
-                        ok, step_no,
+                        queue, qdst, qlvl, qadp, qvalid,
+                        rx, rx_cnt, rx_step, ok, step_no,
                     ), None
 
-                (queue, qvalid, rx, rx_cnt, rx_step, ok, step_no), _ = (
-                    jax.lax.scan(
-                        step,
-                        (queue, qvalid, rx, rx_cnt, rx_step, ok, step_no),
-                        None,
-                        length=steps,
-                    )
+                (queue, qdst, qlvl, qadp, qvalid,
+                 rx, rx_cnt, rx_step, ok, step_no), _ = jax.lax.scan(
+                    step,
+                    (queue, qdst, qlvl, qadp, qvalid,
+                     rx, rx_cnt, rx_step, ok, step_no),
+                    None,
+                    length=steps,
                 )
 
             # anything still queued is undeliverable (bad dst / starved link)
@@ -323,13 +563,95 @@ class Router:
             crc_ok = jnp.all(jnp.where(live, verify_frames(rx), True))
             return rx[None], rx_cnt[None], ok[None], crc_ok[None], rx_step[None]
 
-        spec = P(axes)
+        return local
+
+    # -- fused single-jit tick ---------------------------------------------
+
+    def deliver_fused(
+        self,
+        payloads: np.ndarray,  # (R, Bmax, Wcap) u32 — sends grouped by src
+        nbytes: np.ndarray,  # (R, Bmax) int32 true byte lengths
+        routes: np.ndarray,  # (R, Bmax, 3) int32 (src, dst, seq0)
+        levels: np.ndarray,  # (R, Bmax) uint32 per-send ListLevels
+        send_valid: np.ndarray,  # (R, Bmax) bool — real send vs padding row
+        axis_steps: Tuple[Tuple[int, int], ...],
+        total: int,
+    ):
+        """One fused tick: frame every rank's sends, lay the live frames out
+        as that rank's TX queue, run the routed scan, and split the
+        delivered frames into (headers, payloads) — ONE
+        ``jax.jit(shard_map(...))``, every stage per-device, no host round
+        trips and no cross-device data motion beyond the routing ppermutes
+        themselves.
+
+        Returns device arrays ``(rx_hdr (R, cap, HDR_WORDS), rx_pay
+        (R, cap, frame_words), rx_cnt, ok, crc_ok, rx_step)``; the caller
+        materializes host bytes only at reassembly time (``Mailbox.recv``).
+        """
+        key = (payloads.shape[1], payloads.shape[2], axis_steps, total)
+        fn = self._fused.get(key)
+        if fn is None:
+            fn = self._fused[key] = self._build_fused(
+                payloads.shape[1], payloads.shape[2], axis_steps, total
+            )
+        return fn(
+            jnp.asarray(payloads), jnp.asarray(nbytes), jnp.asarray(routes),
+            jnp.asarray(levels), jnp.asarray(send_valid),
+        )
+
+    def _build_fused(
+        self, Bmax: int, Wcap: int,
+        axis_steps: Tuple[Tuple[int, int], ...], total: int,
+    ):
+        # deferred import: keep package init order independent
+        from .frames import frame_parts_batch
+
+        cfg = self.config
+        W = cfg.frame_width
+        phits = cfg.frame_phits
+        frame_words = phits * PHIT_WORDS
+        F = Wcap // frame_words + 1  # + terminator
+        T = Bmax * F  # a rank's TX queue is exactly its own frames
+        rx_cap, q_cap = self._capacities(T, total)
+        route_local = self._build_local(T, axis_steps, q_cap, rx_cap)
+        adaptive = cfg.adaptive
+
+        def local(payloads, nbytes, routes, levels, svalid):
+            # (1, Bmax, …) — one device's pending sends.  Framing here means
+            # the frames are BORN on the rank that owns them: no global
+            # scatter, no resharding — the only cross-device traffic in the
+            # whole tick is the routing ppermutes.
+            hdr, data, _ = frame_parts_batch(
+                payloads[0], nbytes[0], routes[0], list_level=levels[0],
+                frame_phits=phits, adaptive=adaptive,
+            )
+            # wire-layout assembly (the Pallas assemble kernel's jnp twin —
+            # inside shard_map the concat is free; the kernel remains the
+            # unfused/TPU path)
+            frames = jnp.concatenate([hdr, data], axis=-1)  # (Bmax, F, W)
+            tx = frames.reshape(1, T, W)
+            # frame f of send i is live iff f < frame_capacity(nbytes_i)
+            words = (nbytes[0] + 3) // 4
+            n_live = -(-words // frame_words) + 1
+            fidx = jnp.arange(F, dtype=jnp.int32)[None, :]
+            tx_valid = (
+                svalid[0][:, None] & (fidx < n_live[:, None])
+            ).reshape(1, T)
+            rx, rx_cnt, ok, crc_ok, rx_step = route_local(tx, tx_valid)
+            # RX split, per-device (slicing — bit-identical to the Pallas
+            # ``unpack_frames_batch`` twin used by the three-program path)
+            return (
+                rx[:, :, :HDR_WORDS], rx[:, :, HDR_WORDS:],
+                rx_cnt, ok, crc_ok, rx_step,
+            )
+
+        spec = P(self.axis_names)
         return jax.jit(
             shard_map(
                 local,
                 mesh=self.mesh,
-                in_specs=(spec, spec),
-                out_specs=(spec, spec, spec, spec, spec),
+                in_specs=(spec,) * 5,
+                out_specs=(spec,) * 6,
                 check_rep=False,
             )
         )

@@ -80,7 +80,8 @@ def _header_kernel(wire_ref, hdr_ref, out_ref, *, n_headers: int):
 
 
 def _assemble_kernel(hdr_ref, pay_ref, out_ref):
-    # one (stream, frame) tile per grid step: header phit + payload words
+    # one whole stream (all F frames) per grid step: header phit + payload
+    # words concatenate into wire layout lane-parallel across the frames
     out_ref[...] = jnp.concatenate([hdr_ref[...], pay_ref[...]], axis=-1)
 
 
@@ -94,20 +95,21 @@ def pack_frames_batch(
 
     The structure half (sizes, CRC32, route words, tail masking) comes from
     ``fabric.frames.frame_parts_batch``; this kernel is the payload half —
-    one VMEM tile per (stream, frame) writes the wire-layout frame.  Output
-    is (B, F, HDR_WORDS + frame_words), bit-identical to a vmapped
-    ``fabric.frames.frame_stream``.
+    one VMEM tile per stream (all of its frames at once, F x width words)
+    writes the wire-layout frames, so the grid is B steps rather than the
+    old B*F.  Output is (B, F, HDR_WORDS + frame_words), bit-identical to a
+    vmapped ``fabric.frames.frame_stream``.
     """
     B, F, frame_words = payloads.shape
     width = HDR_WORDS + frame_words
     return pl.pallas_call(
         _assemble_kernel,
-        grid=(B, F),
+        grid=(B,),
         in_specs=[
-            pl.BlockSpec((1, 1, HDR_WORDS), lambda b, f: (b, f, 0)),
-            pl.BlockSpec((1, 1, frame_words), lambda b, f: (b, f, 0)),
+            pl.BlockSpec((1, F, HDR_WORDS), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, F, frame_words), lambda b: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, width), lambda b, f: (b, f, 0)),
+        out_specs=pl.BlockSpec((1, F, width), lambda b: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, F, width), jnp.uint32),
         interpret=interpret,
     )(headers.astype(jnp.uint32), payloads.astype(jnp.uint32))

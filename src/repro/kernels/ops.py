@@ -58,7 +58,10 @@ def write_headers(wire_u32, headers, interpret: bool = True):
     return stamp_headers(wire_u32, headers, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("list_level", "frame_phits", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("list_level", "frame_phits", "interpret", "adaptive"),
+)
 def encode_frames_batch(
     payloads_u32,  # (B, Wcap) u32 — one row per send, zero-padded
     nbytes,  # (B,) int32 true byte lengths
@@ -66,6 +69,7 @@ def encode_frames_batch(
     list_level: int = 1,
     frame_phits: int = 16,
     interpret: bool = True,
+    adaptive: bool = False,  # stamp the shortest-path route-word bit
 ):
     """Multi-destination SER: B wires -> B routed framed streams.
 
@@ -74,7 +78,7 @@ def encode_frames_batch(
     """
     hdr, data, n_frames = frame_parts_batch(
         payloads_u32, nbytes, routes, list_level=list_level,
-        frame_phits=frame_phits,
+        frame_phits=frame_phits, adaptive=adaptive,
     )
     return pack_frames_batch(hdr, data, interpret=interpret), n_frames
 

@@ -229,21 +229,25 @@ def place_requests(
     nearest shard with free capacity instead of round-robin.
 
     Shards are ordered by round-trip fabric distance from the ingress
-    (``Router.hops(0, s) + hops(s, 0)`` — request path plus response/stream
-    return path); each request takes the nearest shard whose load is still
-    under ``capacity``, spilling to the next nearest when full.  When every
-    shard is full, the least-loaded (nearest first) takes the overflow.
-    ``weights`` measures each request's load — pass per-request sequence
-    counts with ``capacity`` = KV slots so "free" means free *decode slots*
-    (the streaming ingress does; default: one unit per request).  On a 1D
-    ring every round trip is the same length, so placement degenerates to
-    fill-nearest-rank-first — locality is a mesh property; the capacity
-    spill is what keeps one shard from absorbing a whole burst.  Placement
-    cannot change tokens — rows decode independently — only how far each
-    request's wires travel.
+    (``Router.route_hops(0, s) + route_hops(s, 0)`` — request path plus
+    response/stream return path, measured under the router's configured
+    routing mode so placement stays consistent with the paths frames
+    actually take: ``min_hops`` under shortest-path routing, +1-ring
+    ``hops`` under dimension-order); each request takes the nearest shard
+    whose load is still under ``capacity``, spilling to the next nearest
+    when full.  When every shard is full, the least-loaded (nearest first)
+    takes the overflow.  ``weights`` measures each request's load — pass
+    per-request sequence counts with ``capacity`` = KV slots so "free"
+    means free *decode slots* (the streaming ingress does; default: one
+    unit per request).  Under +1-ring routing a 1D round trip is the same
+    length from every shard; under shortest-path routing the round trip is
+    ``2 * min_hops``, so near ranks genuinely cost less and placement
+    prefers them.  Placement cannot change tokens — rows decode
+    independently — only how far each request's wires travel.
     """
     order = sorted(
-        shards, key=lambda s: (router.hops(0, s) + router.hops(s, 0), s)
+        shards,
+        key=lambda s: (router.route_hops(0, s) + router.route_hops(s, 0), s),
     )
     w = weights if weights is not None else [1] * n_requests
     load = {s: 0 for s in order}
@@ -256,9 +260,13 @@ def place_requests(
     return placement
 
 
-def default_serve_fabric(n_shards: Optional[int] = None):
+def default_serve_fabric(
+    n_shards: Optional[int] = None, routing: str = "shortest"
+):
     """The fabric ``serve_requests_sharded`` builds when none is passed:
-    rank 0 ingress plus up to 7 serving shards on the available devices.
+    rank 0 ingress plus up to 7 serving shards on the available devices,
+    shortest-path routed with the fused single-jit tick (pass
+    ``routing="dimension"`` for the legacy +1-ring discipline).
     Returns None when fewer than 2 ranks fit (no shard to route to)."""
     from ..fabric import Fabric, FabricConfig
 
@@ -272,7 +280,9 @@ def default_serve_fabric(n_shards: Optional[int] = None):
         )
     if n_ranks < 2:
         return None
-    return Fabric(n_ranks=n_ranks, config=FabricConfig(frame_phits=16))
+    return Fabric(
+        n_ranks=n_ranks, config=FabricConfig(frame_phits=16, routing=routing)
+    )
 
 
 def serve_requests_sharded(
@@ -286,6 +296,7 @@ def serve_requests_sharded(
     n_shards: Optional[int] = None,
     fabric=None,
     placement: Optional[List[int]] = None,
+    routing: str = "shortest",
 ) -> List[bytes]:
     """Answer N request wires across fabric-connected serving shards.
 
@@ -307,7 +318,7 @@ def serve_requests_sharded(
     than 2 ranks (no shard to route to).
     """
     if fabric is None:
-        fabric = default_serve_fabric(n_shards)
+        fabric = default_serve_fabric(n_shards, routing=routing)
     if fabric is None or fabric.n_ranks < 2:
         return serve_requests(
             params, cfg, wires, max_new=max_new, pad_to=pad_to,
@@ -377,6 +388,8 @@ def serve_requests_streaming(
     qos_levels: Optional[List[int]] = None,
     overlap: bool = True,
     on_token=None,
+    on_event=None,
+    routing: str = "shortest",
 ) -> List[bytes]:
     """Answer N request wires with token-level streamed responses.
 
@@ -402,6 +415,11 @@ def serve_requests_streaming(
     ``qos_levels`` tags each request's stream chunks with a ListLevel (the
     tenant's QoS class when the fabric is built with
     ``FabricConfig.qos_weights``); default: level 1 for everyone.
+    ``on_event(StreamEvent)`` fires per arriving chunk with the raw stream
+    event (including ``arrive_step``, the router scan step its carrying
+    message arrived at — benchmarks use it to measure time-to-token
+    jitter); ``routing`` picks the fabric's routing mode when no ``fabric``
+    is passed.
 
     Returns the final response wires, byte-identical to ``serve_requests``
     on the same inputs (the streamed tokens are re-serialized through the
@@ -411,7 +429,7 @@ def serve_requests_streaming(
     from ..stream import ChunkLane, StreamReader
 
     if fabric is None:
-        fabric = default_serve_fabric(n_shards)
+        fabric = default_serve_fabric(n_shards, routing=routing)
     if fabric is None or fabric.n_ranks < 2:
         return serve_requests(
             params, cfg, wires, max_new=max_new, pad_to=pad_to,
@@ -478,6 +496,8 @@ def serve_requests_streaming(
                 raise RuntimeError(
                     f"ingress: corrupt stream chunks from shard {ev.src}"
                 )
+            if on_event is not None:
+                on_event(ev)
             if on_token is not None:
                 k, j = ev.stream_id >> 16, ev.stream_id & 0xFFFF
                 m = globals_of[ev.src][k]
@@ -546,6 +566,11 @@ def main() -> None:
     ap.add_argument("--n-shards", type=int, default=None,
                     help="serving shards for --sharded/--streaming "
                          "(default: devices-1)")
+    ap.add_argument("--routing", choices=("shortest", "dimension"),
+                    default="shortest",
+                    help="fabric routing mode for --sharded/--streaming: "
+                         "per-frame shortest ring direction (default) or "
+                         "the legacy +1-only dimension order")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -576,14 +601,14 @@ def main() -> None:
         resp_wires = serve_requests_streaming(
             params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
             slots=args.slots, n_shards=args.n_shards,
-            overlap=not args.no_overlap,
+            overlap=not args.no_overlap, routing=args.routing,
             on_token=lambda m, j, step, tok: first_tok_t.append(time.time())
             if not first_tok_t else None,
         )
     elif args.sharded:
         resp_wires = serve_requests_sharded(
             params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
-            slots=args.slots, n_shards=args.n_shards,
+            slots=args.slots, n_shards=args.n_shards, routing=args.routing,
         )
     else:
         resp_wires = serve_requests(

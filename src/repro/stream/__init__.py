@@ -31,10 +31,18 @@ from .chunks import (
     encode_chunk_burst,
     encode_token_chunk,
 )
-from .plane import ChunkLane, StreamEvent, StreamReader, StreamState, StreamWriter
+from .plane import (
+    ChunkLane,
+    StreamEvent,
+    StreamReader,
+    StreamState,
+    StreamWriter,
+    arrive_stats,
+)
 
 __all__ = [
     "CHUNK_META_WORDS", "FLAG_EOS", "MAX_CHUNK_TOKENS", "TokenChunk",
     "decode_token_chunks", "encode_chunk_burst", "encode_token_chunk",
     "ChunkLane", "StreamEvent", "StreamReader", "StreamState", "StreamWriter",
+    "arrive_stats",
 ]

@@ -37,6 +37,28 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 from .chunks import TokenChunk, decode_token_chunks, encode_chunk_burst
 
 
+def arrive_stats(steps: Iterable[int]) -> Dict[str, float]:
+    """Latency statistics over a trace of router arrive steps: ``mean``
+    tracks hop count + queueing, ``p95``/``max`` expose the tail a
+    far-shard or starved tenant produces, and ``jitter`` is the stddev —
+    the time-to-token wobble the shortest-path router shrinks.  Shared by
+    :meth:`StreamReader.arrive_stats` and the benchmarks so the two can
+    never diverge."""
+    arr = sorted(steps)
+    if not arr:
+        return {"n": 0, "mean": 0.0, "p95": 0.0, "max": 0.0, "jitter": 0.0}
+    n = len(arr)
+    mean = sum(arr) / n
+    var = sum((s - mean) ** 2 for s in arr) / n
+    return {
+        "n": n,
+        "mean": mean,
+        "p95": float(arr[min(n - 1, int(0.95 * n))]),
+        "max": float(arr[-1]),
+        "jitter": var ** 0.5,
+    }
+
+
 @dataclass
 class StreamEvent:
     """Tokens from one chunk the moment it reached the reader."""
@@ -109,6 +131,10 @@ class StreamState:
     ok: bool = True
     next_step: int = 0
     level: int = 1
+    #: router scan step each of this stream's chunks arrived at (one entry
+    #: per chunk, in step order) — the per-tick fabric latency trace that
+    #: makes time-to-token *jitter* measurable, not just the mean
+    arrive_steps: List[int] = field(default_factory=list)
 
 
 class StreamReader:
@@ -141,6 +167,7 @@ class StreamReader:
                 st.next_step = c.step + 1
                 st.tokens.extend(c.tokens)
                 st.eos = st.eos or c.eos
+                st.arrive_steps.append(getattr(d, "arrive_step", 0))
                 events.append(
                     StreamEvent(
                         d.src, c.stream_id, c.step, c.tokens, c.eos, st.ok,
@@ -148,6 +175,14 @@ class StreamReader:
                     )
                 )
         return events
+
+    def arrive_stats(self) -> Dict[str, float]:
+        """Aggregate in-fabric latency of every chunk seen so far: the
+        router scan step each chunk's carrying message arrived at (see the
+        module-level :func:`arrive_stats` for the fields)."""
+        return arrive_stats(
+            s for st in self.streams.values() for s in st.arrive_steps
+        )
 
     def all_eos(self, expected: Optional[Iterable[Tuple[int, int]]] = None) -> bool:
         """True when every stream (or every ``expected`` key) saw its EOS."""

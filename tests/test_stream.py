@@ -127,6 +127,20 @@ def test_stream_corruption_flags_exactly_one_stream(fab):
     assert reader.streams[(3, 2)].tokens == [221, 222]
 
 
+def test_stream_reader_arrive_stats():
+    """The reader aggregates each chunk's router arrive step into the
+    latency trace benchmarks read (mean / p95 / max / jitter)."""
+    reader = StreamReader()
+    assert reader.arrive_stats()["n"] == 0
+    for step, arrive in enumerate((2, 2, 6, 2)):
+        reader.feed([Delivery(1, encode_token_chunk(9, step, (step,)),
+                              arrive_step=arrive)])
+    st = reader.arrive_stats()
+    assert st["n"] == 4 and st["max"] == 6.0 and st["mean"] == 3.0
+    assert st["jitter"] > 0
+    assert reader.streams[(1, 9)].arrive_steps == [2, 2, 6, 2]
+
+
 def test_stream_reader_flags_step_gap():
     """A lost chunk (step gap) or a chunk after EOS marks the stream
     corrupt even when every frame CRC passes."""
