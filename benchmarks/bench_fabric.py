@@ -21,6 +21,13 @@ Measurements on an 8-rank host mesh (``XLA_FLAGS`` device count 8):
   the default (shortest-path, fused) fabric.
 * **credit sweep** — same transfer at different per-link credit budgets:
   fewer credits = more steps (flow control back-pressure made visible).
+* **starved-link defection sweep** — one saturated +1 link (a heavy tenant
+  bursts 0 -> 1 while a light tenant streams 0 -> 4 across the same
+  outgoing link), with congestion-aware direction defection off vs on
+  (``FabricConfig.defect_after``).  With defection, starved frames escape
+  to the idle opposite ring direction, so the tick drains both directions
+  in parallel: higher frames/s AND a lower light-tenant p95 arrive step.
+  Delivered bytes are asserted identical in every row.
 
 Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python benchmarks/bench_fabric.py
@@ -50,11 +57,11 @@ LAST_METRICS: dict = {}
 
 
 def _fabric(credits: int = 8, routing: str = "shortest",
-            fused: bool = True) -> Fabric:
+            fused: bool = True, defect_after: int = 0) -> Fabric:
     n = min(len(jax.devices()), 8)
     return Fabric(n_ranks=n, config=FabricConfig(
         frame_phits=FRAME_PHITS, credits=credits, routing=routing,
-        fused=fused,
+        fused=fused, defect_after=defect_after,
     ))
 
 
@@ -201,6 +208,9 @@ def bench_fused() -> Table:
         n_frames = (fab.frames_routed - before[name]) // 8  # warm + 7 reps
         times[name] = dt
         t.add(name, N_MSGS, round(dt, 4), round(n_frames / dt, 1))
+        if name == "fused":
+            # the CI perf gate compares this across PRs (run.py --smoke)
+            LAST_METRICS["smoke_frames_per_s"] = round(n_frames / dt, 1)
     LAST_METRICS["fused_speedup"] = round(
         times["three-program"] / times["fused"], 2
     )
@@ -243,12 +253,72 @@ def bench_credits() -> Table:
     return t
 
 
+def bench_starved_link() -> Table:
+    """Congestion-aware defection under one saturated +1 link: a heavy
+    tenant bursts 0 -> 1 while a light tenant streams 0 -> 4 through the
+    same outgoing link.  With ``defect_after`` set, starved frames escape
+    to the idle -1 ring, so the tick drains both directions in parallel —
+    more frames/s AND a lower light-tenant tail latency."""
+    t = Table("fabric: starved +1 link — defection off vs on", [
+        "defect_after", "frames", "light_p95", "light_max", "steps",
+        "s/tick", "frames/s", "speedup",
+    ])
+    from repro.stream import arrive_stats
+
+    rng = np.random.default_rng(5)
+    heavy = [_payload(rng, 1536) for _ in range(6)]  # saturates 0 -> 1
+    light = [_payload(rng, 1536) for _ in range(6)]  # 0 -> 4, same out-link
+    stats = {}
+
+    def make_tick(fab):
+        a, hv, lt = fab.mailbox(0), fab.mailbox(1), fab.mailbox(4)
+
+        def tick():
+            for w in heavy:
+                a.send(1, w, list_level=2)
+            for w in light:
+                a.send(4, w, list_level=1)
+            fab.exchange()
+            got_h, got_l = hv.recv(), lt.recv()
+            assert [d.wire for d in got_h] == heavy
+            assert [d.wire for d in got_l] == light
+            return got_h, got_l
+
+        return tick
+
+    fabs = {k: _fabric(credits=2, defect_after=k) for k in (0, 2)}
+    if next(iter(fabs.values())).n_ranks < 8:
+        return t  # the scenario needs the full 8-ring
+    ticks = {k: make_tick(f) for k, f in fabs.items()}
+    dts = dict(zip(fabs, _interleaved_times(list(ticks.values()))))
+    n_frames = None
+    for k, fab in fabs.items():
+        got_h, got_l = ticks[k]()  # one extra tick for the latency trace
+        if n_frames is None:
+            n_frames = fab.frames_routed // (8 + 1)  # warm + 7 reps + trace
+        st = arrive_stats([d.arrive_step for d in got_l])
+        steps = max(d.arrive_step for d in got_h + got_l)
+        stats[k] = (st, steps, dts[k])
+        t.add(k, n_frames, st["p95"], st["max"], steps, round(dts[k], 4),
+              round(n_frames / dts[k], 1),
+              round(dts[0] / dts[k], 2) if 0 in stats else 1.0)
+    LAST_METRICS["starved_fps_defect_off"] = round(n_frames / dts[0], 1)
+    LAST_METRICS["starved_fps_defect_on"] = round(n_frames / dts[2], 1)
+    LAST_METRICS["starved_fps_speedup"] = round(dts[0] / dts[2], 2)
+    LAST_METRICS["starved_light_p95_off"] = stats[0][0]["p95"]
+    LAST_METRICS["starved_light_p95_on"] = stats[2][0]["p95"]
+    LAST_METRICS["starved_steps_off"] = stats[0][1]
+    LAST_METRICS["starved_steps_on"] = stats[2][1]
+    return t
+
+
 def run() -> List[Table]:
     LAST_METRICS.clear()
     n = check_bit_exact_vs_single_hop()
     print(f"[bench_fabric] routed one-hop bit-exact vs direct channel "
           f"on {n} ranks", file=sys.stderr)
-    tables = [bench_routing(), bench_fused(), bench_hops(), bench_credits()]
+    tables = [bench_routing(), bench_fused(), bench_hops(), bench_credits(),
+              bench_starved_link()]
     if "far_speedup_mean" in LAST_METRICS:  # absent on a 1-device run
         print(f"[bench_fabric] far-destination speedup (shortest+fused vs "
               f"dimension+unfused): mean "
@@ -257,6 +327,13 @@ def run() -> List[Table]:
               f"(hops {LAST_METRICS['hops_dim_worst']} -> "
               f"{LAST_METRICS['hops_sp_worst']}); fused tick alone "
               f"{LAST_METRICS['fused_speedup']}x", file=sys.stderr)
+    if "starved_fps_speedup" in LAST_METRICS:
+        print(f"[bench_fabric] starved +1 link: defection "
+              f"{LAST_METRICS['starved_fps_speedup']}x frames/s, light "
+              f"tenant p95 arrive {LAST_METRICS['starved_light_p95_off']} "
+              f"-> {LAST_METRICS['starved_light_p95_on']} router steps "
+              f"(tick drains in {LAST_METRICS['starved_steps_off']} -> "
+              f"{LAST_METRICS['starved_steps_on']} steps)", file=sys.stderr)
     return tables
 
 

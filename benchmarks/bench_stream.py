@@ -25,6 +25,14 @@ Measurements on the 8 simulated host devices:
   the 1 -> 0 multi-hop path; the table reports the router scan step at
   which the light tenant's stream completes under FIFO credits and under
   weighted round-robin credit classes of increasing light-tenant weight.
+* **backpressure-fed lane clamping** — a saturating tenant and a light
+  tenant stream from a 4-hop shard; the reader's per-class p95 arrive
+  latency feeds back into the heavy tenant's ``ChunkLane``
+  (``p95_threshold``), which then *holds* its bursts and yields its
+  credits: the light tenant's p95/max arrive steps drop while the heavy
+  stream still completes (held chunks ride the next burst, tokens
+  identical).  Reported per scheduler (FIFO and WRR) with the clamp off
+  vs on; all four runs are asserted token-identical.
 
 Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python benchmarks/bench_stream.py [--smoke]
@@ -295,11 +303,80 @@ def bench_qos() -> Table:
     return t
 
 
+def bench_backpressure() -> Table:
+    """Backpressure-fed lane scheduling: the reader's per-class p95 arrive
+    latency clamps a saturating tenant's ``ChunkLane`` flush rate, so its
+    credits spill to the light tenant instead of inflating the queues.
+    Deterministic router-step metrics (no wall clock): the win is where the
+    light tenant's tail latency lands, not how fast this host dispatches."""
+    from repro.fabric import Fabric, FabricConfig
+    from repro.stream import ChunkLane, StreamReader
+
+    t = Table("stream: backpressure-fed lane clamping (4-hop shard)", [
+        "sched", "bp_p95", "light_mean", "light_p95", "tick_steps_mean",
+        "heavy_p95", "heavy_holds",
+    ])
+    N_TICKS, N_HEAVY = 24, 6
+    rng = np.random.default_rng(9)
+    heavy_toks = rng.integers(0, 1 << 31, (N_TICKS, N_HEAVY, 16))
+    light_toks = rng.integers(0, 1 << 31, (N_TICKS, 2))
+    tokens = {}
+    for sched, weights in (("fifo", None), ("wrr 3:1", (3, 1))):
+        for bp in (None, 6.0):
+            fab = Fabric(n_ranks=8, config=FabricConfig(
+                frame_phits=2, credits=4, qos_weights=weights))
+            box = fab.mailbox(4)  # 4 hops back to the ingress either way
+            heavy_lane = ChunkLane(box, 0, list_level=2, p95_threshold=bp)
+            light_lane = ChunkLane(box, 0, list_level=1)
+            hw = [heavy_lane.writer(100 + i) for i in range(N_HEAVY)]
+            lw = light_lane.writer(7)
+            reader = StreamReader()
+            tick_steps = []  # per-tick fabric drain (max arrive step)
+            for tick in range(N_TICKS):
+                eos = tick == N_TICKS - 1
+                for i, w in enumerate(hw):
+                    w.write([int(x) for x in heavy_toks[tick, i]], eos=eos)
+                lw.write([int(x) for x in light_toks[tick]], eos=eos)
+                heavy_lane.flush()  # heavy queues first: worst case FIFO
+                light_lane.flush()
+                fab.exchange()
+                got = fab.mailbox(0).recv()
+                tick_steps.append(max(d.arrive_step for d in got))
+                reader.feed(got)
+                per = reader.class_arrive_stats(window=64)
+                heavy_lane.feedback((per.get(2) or {}).get("p95"))
+            while heavy_lane.flush(force=True):  # drain the held backlog
+                fab.exchange()
+                reader.feed(fab.mailbox(0).recv())
+            # token identity: clamping delays bursts, never changes them
+            assert reader.all_eos()
+            toks = {k: tuple(st.tokens) for k, st in reader.streams.items()}
+            assert all(st.ok for st in reader.streams.values())
+            tokens.setdefault("ref", toks)
+            assert toks == tokens["ref"], (sched, bp)
+            per = reader.class_arrive_stats()
+            steps_mean = sum(tick_steps) / len(tick_steps)
+            tag = f"{'wrr' if weights else 'fifo'}_{'on' if bp else 'off'}"
+            LAST_METRICS[f"bp_light_mean_{tag}"] = round(per[1]["mean"], 2)
+            LAST_METRICS[f"bp_light_p95_{tag}"] = per[1]["p95"]
+            LAST_METRICS[f"bp_tick_steps_mean_{tag}"] = round(steps_mean, 2)
+            LAST_METRICS[f"bp_heavy_holds_{tag}"] = heavy_lane.holds
+            t.add(sched, bp or "off", round(per[1]["mean"], 2),
+                  per[1]["p95"], round(steps_mean, 2), per[2]["p95"],
+                  heavy_lane.holds)
+    LAST_METRICS["bp_light_p95_ratio_fifo"] = round(
+        LAST_METRICS["bp_light_p95_fifo_off"]
+        / max(LAST_METRICS["bp_light_p95_fifo_on"], 1e-9), 2
+    )
+    return t
+
+
 def run() -> List[Table]:
     LAST_METRICS.clear()
     print("[bench_stream] streamed wires asserted bit-identical to the "
           "batched plane in every row", file=sys.stderr)
-    tables = [bench_ttft(), bench_routing(), bench_overlap(), bench_qos()]
+    tables = [bench_ttft(), bench_routing(), bench_overlap(), bench_qos(),
+              bench_backpressure()]
     ttfts = {r[0]: r[3] for r in tables[0].rows}
     LAST_METRICS["ttft_whole_response"] = ttfts.get("whole-response")
     LAST_METRICS["ttft_streamed_overlap"] = ttfts.get("streamed+overlap")
@@ -312,6 +389,12 @@ def run() -> List[Table]:
           f"{LAST_METRICS['jitter_spread_shortest']} router steps "
           f"(p95 {LAST_METRICS['arrive_p95_spread_dimension']} -> "
           f"{LAST_METRICS['arrive_p95_spread_shortest']})",
+          file=sys.stderr)
+    print(f"[bench_stream] backpressure clamp (FIFO): light-tenant p95 "
+          f"{LAST_METRICS['bp_light_p95_fifo_off']} -> "
+          f"{LAST_METRICS['bp_light_p95_fifo_on']} router steps "
+          f"({LAST_METRICS['bp_light_p95_ratio_fifo']}x) with the heavy "
+          f"lane held {LAST_METRICS['bp_heavy_holds_fifo_on']} ticks",
           file=sys.stderr)
     return tables
 

@@ -6,9 +6,16 @@
 ``python -m benchmarks.run --smoke`` runs the fabric + stream benches only
 and ALSO writes ``BENCH_fabric.json`` / ``BENCH_stream.json`` at the repo
 root — headline metrics (frames/s, far-destination speedup, TTFT, hop
-counts, arrive-step jitter) plus the full tables — so CI can upload them
-and the perf trajectory is tracked across PRs instead of being a fresh
-anecdote every time.
+counts, arrive-step jitter, starved-link defection, backpressure clamp)
+plus the full tables — so CI can upload them and the perf trajectory is
+tracked across PRs instead of being a fresh anecdote every time.
+
+The smoke run additionally gates on the COMMITTED ``BENCH_fabric.json``:
+if the fabric smoke frames/s (``smoke_frames_per_s``, the fused-tick
+throughput) regressed more than the threshold (default 20%) vs the number
+checked in, the run exits non-zero so CI fails loudly instead of letting
+a slow fabric ship silently.  Override with ``BENCH_GATE_MIN_RATIO``
+(e.g. ``0.5`` on noisy shared runners) or disable with ``BENCH_GATE=0``.
 """
 from __future__ import annotations
 
@@ -39,6 +46,57 @@ def _run_mod(name: str, mod) -> list:
     return tables
 
 
+def _perf_gate(baseline, metrics) -> None:
+    """Fail the smoke run when the fabric regressed vs the committed
+    BENCH_fabric.json (artifacts are already written, so CI still uploads
+    the evidence).  Two checks:
+
+    * **router steps** (machine-independent, strict 20% floor): the
+      starved-link tick's drain steps under defection are a deterministic
+      simulation observable — the same code produces the same number on
+      any host, so growth here is a real routing regression, never noise.
+    * **wall-clock frames/s** (hardware-dependent): compared at the
+      ``BENCH_GATE_MIN_RATIO`` floor, which CI sets generously (0.5)
+      because the committed baseline may come from different hardware and
+      shared runners are noisy.  ``BENCH_GATE=0`` disables both.
+    """
+    if os.environ.get("BENCH_GATE", "1") in ("0", "false", "no"):
+        print("[perf-gate] disabled via BENCH_GATE=0", file=sys.stderr)
+        return
+    baseline, metrics = baseline or {}, metrics or {}
+    failed = False
+    old_steps = baseline.get("starved_steps_on")
+    new_steps = metrics.get("starved_steps_on")
+    if old_steps and new_steps:
+        if new_steps > old_steps * 1.2:
+            print(f"[perf-gate] FAIL: starved-link drain steps (defection "
+                  f"on, deterministic) regressed {old_steps} -> "
+                  f"{new_steps} (> 1.20x floor)", file=sys.stderr)
+            failed = True
+        else:
+            print(f"[perf-gate] ok: starved-link drain steps {old_steps} "
+                  f"-> {new_steps} (deterministic, <= 1.20x)",
+                  file=sys.stderr)
+    min_ratio = float(os.environ.get("BENCH_GATE_MIN_RATIO", "0.8"))
+    old = baseline.get("smoke_frames_per_s")
+    new = metrics.get("smoke_frames_per_s")
+    if not old or not new:
+        print(f"[perf-gate] no frames/s baseline (old={old}, new={new}) "
+              f"— skipping the wall-clock check", file=sys.stderr)
+    elif new / old < min_ratio:
+        print(f"[perf-gate] FAIL: fabric smoke frames/s regressed "
+              f"{old} -> {new} ({new / old:.2f}x < {min_ratio:.2f}x "
+              f"floor); set BENCH_GATE_MIN_RATIO or BENCH_GATE=0 to "
+              f"override", file=sys.stderr)
+        failed = True
+    else:
+        print(f"[perf-gate] ok: fabric smoke frames/s {old} -> {new} "
+              f"({new / old:.2f}x >= {min_ratio:.2f}x floor)",
+              file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -50,6 +108,14 @@ def main() -> None:
     from . import bench_fabric, bench_stream
 
     if args.smoke:
+        # read the COMMITTED fabric baseline before this run overwrites it
+        baseline = None
+        fabric_json = REPO_ROOT / "BENCH_fabric.json"
+        if fabric_json.exists():
+            try:
+                baseline = json.loads(fabric_json.read_text())["metrics"]
+            except (ValueError, KeyError):
+                baseline = None
         all_tables = []
         for name, mod in (("fabric", bench_fabric), ("stream", bench_stream)):
             tables = _run_mod(f"bench_{name}", mod)
@@ -68,6 +134,7 @@ def main() -> None:
                 f.write(tb.csv())
                 f.write("\n")
         print(f"wrote {csv_path} ({len(all_tables)} tables)")
+        _perf_gate(baseline, bench_fabric.LAST_METRICS)
         return
 
     from . import bench_fig14, bench_fe_case_study, bench_schema_complexity

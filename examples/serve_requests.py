@@ -140,6 +140,17 @@ def main():
                   f"time-to-first-token {arrivals[0]:.3f}s vs "
                   f"{dt_stream:.2f}s total "
                   f"({n_tok / dt_stream:.1f} tok/s)")
+            # congestion-control knobs: defection + the backpressure-fed
+            # lane clamp delay bursts but can never change tokens
+            cc_wires = serve_requests_streaming(
+                params, cfg, wires, max_new=MAX_NEW, pad_to=PAD_TO, slots=8,
+                n_shards=args.n_shards, defect_after=2,
+                backpressure_p95=4.0,
+            )
+            assert cc_wires == resp_wires, \
+                "congestion-controlled streaming diverged"
+            print("[streaming]  defect_after=2 + backpressure_p95=4.0: "
+                  "still byte-identical")
 
     # --- seed sequential path, same burst ----------------------------
     t0 = time.time()

@@ -61,8 +61,9 @@ from __future__ import annotations
 
 import logging
 import zlib
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +76,7 @@ from .frames import (
     HDR_ROUTE,
     HDR_SIZE,
     HDR_WORDS,
+    MAX_RANKS,
     PHIT_WORDS,
     SEQ_MOD,
     frame_capacity,
@@ -125,6 +127,15 @@ class Fabric:
     ):
         if mesh is None:
             n = n_ranks or len(jax.devices())
+            if n > MAX_RANKS:
+                # fail HERE with the route-word explanation rather than a
+                # confusing device-shortage error out of make_mesh (the
+                # Router re-checks for meshes passed in directly)
+                raise ValueError(
+                    f"n_ranks={n} exceeds MAX_RANKS={MAX_RANKS}: the route "
+                    f"word's src field is a u7 lane, so larger fabrics "
+                    f"would silently alias ranks mod {MAX_RANKS}"
+                )
             mesh = jax.make_mesh((n,), ("fabric",), devices=jax.devices()[:n])
         self.router = Router(mesh, axis_names, config)
         self.config = config
@@ -137,6 +148,11 @@ class Fabric:
         self._rx_seq = [[0] * R for _ in range(R)]  # [rank][src] expected seq
         self._partial = [[_PartialMsg() for _ in range(R)] for _ in range(R)]
         self._inbox: List[List[Delivery]] = [[] for _ in range(R)]
+        #: per-(rank, QoS class) trace of recent Delivery.arrive_steps —
+        #: the congestion observable the stream plane's backpressure-fed
+        #: lane scheduler consumes (class = list_level % n_classes, the
+        #: same key the router's WRR credit scheduler uses)
+        self._arrive: List[Dict[int, deque]] = [{} for _ in range(R)]
         #: the dispatched-but-not-reassembled tick (device arrays + counts)
         self._inflight: Optional[Tuple] = None
         #: tick-shape buckets seen so far — a tick landing in a new bucket
@@ -183,7 +199,16 @@ class Fabric:
                 "cannot be distinguished from a bare end-of-message "
                 "terminator — serialize an empty List instead"
             )
-        self._pending.append((src, dst, bytes(wire), list_level))
+        if not isinstance(list_level, (int, np.integer)) or not (
+            0 <= int(list_level) <= 255
+        ):
+            # the ListLevel header lane is u8-budgeted; an out-of-range
+            # level would wrap silently and alias another tenant's QoS
+            # class (the router keys credit classes on level % n_classes)
+            raise ValueError(
+                f"list_level must be an int in [0, 255], got {list_level!r}"
+            )
+        self._pending.append((src, dst, bytes(wire), int(list_level)))
 
     # -- the fabric tick ---------------------------------------------------
 
@@ -466,6 +491,7 @@ class Fabric:
                         Delivery(src, bytes(part.data), part.ok, part.level,
                                  part.step)
                     )
+                    self._record_arrive(rank, part.level, part.step)
                     self._partial[rank][src] = part = _PartialMsg()
                 else:
                     part.data.extend(mp[j].tobytes()[:size])
@@ -474,6 +500,35 @@ class Fabric:
     def drain(self, rank: int) -> List[Delivery]:
         out, self._inbox[rank] = self._inbox[rank], []
         return out
+
+    # -- congestion observability -----------------------------------------
+
+    @property
+    def n_classes(self) -> int:
+        """QoS credit classes the router schedules (1 = single-class FIFO)."""
+        return len(self.config.qos_weights) if self.config.qos_weights else 1
+
+    def _record_arrive(self, rank: int, level: int, step: int) -> None:
+        trace = self._arrive[rank].setdefault(
+            level % self.n_classes, deque(maxlen=256)
+        )
+        trace.append(step)
+
+    def class_arrive_stats(self, rank: int) -> Dict[int, Dict[str, float]]:
+        """Per-QoS-class arrive-step percentiles of the messages recently
+        delivered to ``rank`` (sliding window of 256 per class): ``{class:
+        {n, mean, p95, max, jitter}}`` — the congestion signal a
+        backpressure-fed sender (``stream.plane.ChunkLane``) clamps on.
+        Classes key as ``list_level % n_classes``, matching the router's
+        WRR credit scheduler."""
+        # deferred: the percentile math is shared with StreamReader so the
+        # two ends of the feedback loop can never disagree on "p95"
+        from ..stream.plane import arrive_stats
+
+        return {
+            cls: arrive_stats(trace)
+            for cls, trace in sorted(self._arrive[rank].items())
+        }
 
 
 class Mailbox:
@@ -490,3 +545,8 @@ class Mailbox:
     def recv(self) -> List[Delivery]:
         """Drain messages delivered to this rank (run ``exchange`` first)."""
         return self.fabric.drain(self.rank)
+
+    def arrive_stats(self) -> Dict[int, Dict[str, float]]:
+        """Per-QoS-class arrive-step percentiles of this rank's recent
+        deliveries (see :meth:`Fabric.class_arrive_stats`)."""
+        return self.fabric.class_arrive_stats(self.rank)

@@ -33,6 +33,28 @@ Topology and algorithm
   back-pressure analog).  Frames that cannot be injected wait in a
   per-device queue; transiting frames have priority over fresh injections,
   which preserves per-source FIFO order along a path.
+* **Congestion-aware direction defection** (``config.defect_after = k``,
+  default 0 = off): every device tracks, per (outgoing link, direction), how
+  many *consecutive* scan steps that link's credit budget left eligible
+  demand waiting.  A queued frame whose route word carries the adaptive bit
+  may *defect* to the opposite ring direction once its preferred link has
+  been starved for ``k`` straight steps — but only into that direction's
+  *spare* credits (after its natural traffic was scheduled), so at most
+  ``credits`` frames defect per step and a starved queue cannot stampede
+  onto the other ring.  A defector commits to its new direction for the
+  rest of the axis (the commitment travels with the frame through the
+  ppermutes), which bounds its path at ``n - 1`` hops and rules out
+  ping-pong oscillation.  Defection changes *paths*, never bytes: the
+  receiver reorders frames by ``seq``, so delivery stays byte-identical to
+  static shortest-path and dimension-order routing (property-tested).
+* **Early-exit scans** (``config.early_exit``, default on): each axis scan
+  runs as a ``lax.while_loop`` that stops as soon as no device still holds
+  a frame needing the axis (one cheap global ``psum`` of a bool per step),
+  with the static per-axis bound as the cap.  The demand bound therefore
+  prices the *worst case* while the tick pays only for the traffic it
+  actually carries — in particular the conservative defection bound (a
+  defector may ride the long way around) costs nothing when nothing
+  defects.
 * **QoS credit classes** (``config.qos_weights``): instead of handing the
   per-link credits to the frontmost frames FIFO, the inject step can run
   *weighted round-robin* over credit classes keyed by the frame's
@@ -113,6 +135,16 @@ class FabricConfig:
     #: remains for fault injection (``Fabric.tx_hook``) and as the
     #: regression oracle.
     fused: bool = True
+    #: congestion-aware direction defection: an adaptive frame whose
+    #: preferred link has been credit-starved for this many CONSECUTIVE
+    #: scan steps may take the opposite ring direction instead (into that
+    #: direction's spare credits only).  0 = off — the static per-frame
+    #: shortest-path choice of PR 4, bit-for-bit.
+    defect_after: int = 0
+    #: stop each axis scan as soon as no device still holds a frame that
+    #: needs the axis (one global psum of a bool per step); the static
+    #: demand bound becomes a cap instead of the price every tick pays.
+    early_exit: bool = True
 
     def __post_init__(self) -> None:
         if self.frame_phits < 1 or self.credits < 1:
@@ -124,6 +156,16 @@ class FabricConfig:
             raise ValueError(
                 f"routing must be 'shortest' or 'dimension', got "
                 f"{self.routing!r}"
+            )
+        if self.defect_after < 0:
+            raise ValueError(
+                f"defect_after must be >= 0, got {self.defect_after}"
+            )
+        if self.defect_after > 0 and self.routing != "shortest":
+            raise ValueError(
+                "defect_after needs routing='shortest': only frames whose "
+                "route word carries the adaptive bit may defect, and "
+                "dimension-order frames never do"
             )
         if self.qos_weights is not None:
             if len(self.qos_weights) < 1 or any(
@@ -146,6 +188,11 @@ class FabricConfig:
     @property
     def adaptive(self) -> bool:
         return self.routing == "shortest"
+
+    @property
+    def defection(self) -> bool:
+        """Congestion-aware defection active (adaptive routing + k > 0)."""
+        return self.adaptive and self.defect_after > 0
 
 
 def qos_quotas(credits: int, weights: Sequence[int]) -> Tuple[int, ...]:
@@ -210,7 +257,13 @@ class Router:
         self.sizes = tuple(mesh.shape[a] for a in self.axis_names)
         self.n_ranks = math.prod(self.sizes)
         if self.n_ranks > MAX_RANKS:
-            raise ValueError(f"route word holds u7 ranks; got {self.n_ranks}")
+            raise ValueError(
+                f"fabric of {self.n_ranks} ranks exceeds MAX_RANKS="
+                f"{MAX_RANKS}: the route word's src field is a u7 lane "
+                f"(frames.py packs adaptive:u1|src:u7|dst:u8|seq:u16), so "
+                f"ranks >= {MAX_RANKS} would silently alias rank "
+                f"(r % {MAX_RANKS}) and misdeliver frames"
+            )
         self.config = config
         self._jitted = {}
         self._fused = {}
@@ -258,14 +311,20 @@ class Router:
     def default_steps(self, total: int) -> Tuple[Tuple[int, int], ...]:
         """Worst-case per-axis (steps, dirs): every live frame crosses the
         busiest link and needs the full pipeline fill.  Shortest-path halves
-        the fill term (max hops per axis drop from ``n`` to ``n // 2``)."""
+        the fill term (max hops per axis drop from ``n`` to ``n // 2``);
+        with defection enabled a starved frame may wait ``defect_after``
+        steps and then ride the long way around (up to ``n - 1`` hops), so
+        the fill term grows back to ``n + defect_after`` — early-exit scans
+        make the looser cap free whenever nothing actually defects."""
         credits = self.config.credits
         out = []
         for n in self.sizes:
             if n == 1:
                 out.append((0, 0))
                 continue
-            if self.config.adaptive:
+            if self.config.defection:
+                fill, dirs = n + self.config.defect_after, DIR_FWD | DIR_BWD
+            elif self.config.adaptive:
                 fill, dirs = n // 2, DIR_FWD | DIR_BWD
             else:
                 fill, dirs = n, DIR_FWD
@@ -292,9 +351,21 @@ class Router:
         even step count so nearby traffic shapes share a jit cache entry.
         An axis no frame crosses costs 0 steps (skipped entirely), and a
         direction no frame takes skips its ppermute.
+
+        With **defection** enabled, a ring whose load exceeds the per-step
+        credit budget can starve frames into the opposite direction, so for
+        those rings the two direction groups merge: the bound becomes
+        ``ceil(ring_load / credits) + (n - 1) + defect_after + 1`` (the
+        preferred link always drains >= ``credits``/step — defectors only
+        ever consume the other direction's *spare* credits — and a defector
+        rides at most ``n - 1`` hops after waiting ``defect_after`` steps),
+        and both directions keep their ppermutes.  Rings that can never
+        starve (``load <= credits``) keep the tight per-direction bound.
+        The early-exit scan makes the slack free when nothing defects.
         """
         credits = self.config.credits
         adaptive = self.config.adaptive
+        defect = self.config.defect_after if self.config.defection else 0
         defaults = self.default_steps(sum(counts))
         out = []
         for ai, n in enumerate(self.sizes):
@@ -321,14 +392,33 @@ class Router:
             if not group:
                 out.append((0, 0))
                 continue
-            steps = max(
-                -(-load // credits) + max_hops[k] + 1
-                for k, load in group.items()
-            )
-            steps = min(steps + (steps % 2), defaults[ai][0])  # even bucket
+            bounds = []
             dirs = 0
-            for (_, dmask) in group:
-                dirs |= dmask
+            if defect:
+                ring_load = Counter()
+                for (ring, _), load in group.items():
+                    ring_load[ring] += load
+                for ring, load in ring_load.items():
+                    if load > credits:  # starvation (so defection) possible
+                        bounds.append(-(-load // credits) + (n - 1) + defect + 1)
+                        dirs |= DIR_FWD | DIR_BWD
+                    else:
+                        for dmask in (DIR_FWD, DIR_BWD):
+                            k = (ring, dmask)
+                            if k in group:
+                                bounds.append(
+                                    -(-group[k] // credits) + max_hops[k] + 1
+                                )
+                                dirs |= dmask
+            else:
+                bounds = [
+                    -(-load // credits) + max_hops[k] + 1
+                    for k, load in group.items()
+                ]
+                for (_, dmask) in group:
+                    dirs |= dmask
+            steps = max(bounds)
+            steps = min(steps + (steps % 2), defaults[ai][0])  # even bucket
             out.append((steps, dirs))
         return tuple(out)
 
@@ -439,17 +529,26 @@ class Router:
             spill = credits - jnp.sum(take)
             return take | (rest & (jnp.cumsum(rest) <= spill))
 
-        def hop(queue, take, axis, perm):
+        def hop(queue, take, axis, perm, extra=None):
             """Scatter this direction's occupants into the link buffer and
-            move it one hop."""
+            move it one hop.  The valid flag — and, with defection, the
+            per-frame direction commitment — ride as trailing u32 columns
+            of the SAME buffer, so each direction costs exactly ONE
+            ppermute per step regardless of how much per-frame state
+            travels with the frames."""
+            E = 2 if extra is not None else 1
             pos = jnp.where(take, jnp.cumsum(take) - 1, credits)
-            link = jnp.zeros((credits, W), jnp.uint32).at[pos].set(
-                queue, mode="drop"
+            buf = jnp.pad(queue, ((0, 0), (0, E)))
+            buf = buf.at[:, W].set(take.astype(jnp.uint32))
+            if extra is not None:
+                buf = buf.at[:, W + 1].set(extra.astype(jnp.uint32))
+            link = jnp.zeros((credits, W + E), jnp.uint32).at[pos].set(
+                buf, mode="drop"
             )
-            lvalid = jnp.zeros((credits,), bool).at[pos].set(take, mode="drop")
             arr = jax.lax.ppermute(link, axis, perm)
-            avalid = jax.lax.ppermute(lvalid, axis, perm)
-            return arr, avalid
+            avalid = arr[:, W] != 0
+            adir = arr[:, W + 1].astype(jnp.int32) if extra is not None else None
+            return arr[:, :W], avalid, adir
 
         def local(tx, tx_valid):  # (1, T, W), (1, T) — one device's view
             coords = [jax.lax.axis_index(a) for a in axes]
@@ -484,6 +583,11 @@ class Router:
                 half = n_axis // 2
                 use_fwd = bool(dirs & DIR_FWD)
                 use_bwd = bool(dirs & DIR_BWD)
+                # defection needs both ppermutes live on the axis (plan_steps
+                # only emits a one-direction mask when no ring can starve)
+                defect = cfg.defect_after if (
+                    cfg.defection and use_fwd and use_bwd
+                ) else 0
                 # hoisted: the per-frame scheduling keys (destination coord
                 # on this axis, ListLevel class, adaptive flag) are computed
                 # ONCE for the resident queue and only for the <= arrivals
@@ -493,12 +597,16 @@ class Router:
                 qlvl = queue[:, HDR_LEVEL]
                 qadp = route_adaptive(queue)
 
-                def step(carry, _, ai=ai, axis=axis, n_axis=n_axis,
+                def step(carry, ai=ai, axis=axis, n_axis=n_axis,
                          myc=myc, half=half, use_fwd=use_fwd,
                          use_bwd=use_bwd, fwd_perm=fwd_perm,
-                         bwd_perm=bwd_perm):
-                    (queue, qdst, qlvl, qadp, qvalid,
-                     rx, rx_cnt, rx_step, ok, step_no) = carry
+                         bwd_perm=bwd_perm, defect=defect):
+                    if defect:
+                        (queue, qdst, qlvl, qadp, qdir, qvalid,
+                         rx, rx_cnt, rx_step, ok, step_no, sf, sb) = carry
+                    else:
+                        (queue, qdst, qlvl, qadp, qvalid,
+                         rx, rx_cnt, rx_step, ok, step_no) = carry
                     step_no = step_no + 1
                     # inject: frames still off-coordinate on this axis, up
                     # to `credits` per direction per step, scheduled by
@@ -506,22 +614,64 @@ class Router:
                     # re-queued at the front below)
                     fwd = (qdst - myc) % n_axis
                     elig = qvalid & (fwd != 0)
-                    go_bwd = qadp & (fwd > half) if use_bwd else (
+                    prefer_bwd = qadp & (fwd > half) if use_bwd else (
                         jnp.zeros_like(elig)
                     )
-                    arrs, avalids = [], []
+                    if defect:
+                        # a committed defector keeps its direction for the
+                        # rest of the axis; everyone else uses the static
+                        # shortest-path preference
+                        go_bwd = jnp.where(qdir == 0, prefer_bwd, qdir == 2)
+                    else:
+                        go_bwd = prefer_bwd
+                    take_f = select(qlvl, elig & ~go_bwd) if use_fwd else None
+                    take_b = select(qlvl, elig & go_bwd) if use_bwd else None
+                    if defect:
+                        # per-(link, direction) starvation: demand this
+                        # direction's credits left waiting THIS step
+                        starved_f = jnp.any(elig & ~go_bwd & ~take_f)
+                        starved_b = jnp.any(elig & go_bwd & ~take_b)
+                        # defectors: uncommitted adaptive frames whose
+                        # preferred link has starved `defect` straight
+                        # steps, admitted only into the OPPOSITE
+                        # direction's spare credits (after its natural
+                        # traffic) — at most `credits` defect per step, so
+                        # a starved queue cannot stampede onto the other
+                        # ring and re-congest it
+                        can_b = (elig & ~go_bwd & ~take_f & qadp
+                                 & (qdir == 0) & (sf >= defect))
+                        extra_b = can_b & (
+                            jnp.cumsum(can_b) <= credits - jnp.sum(take_b)
+                        )
+                        can_f = (elig & go_bwd & ~take_b & qadp
+                                 & (qdir == 0) & (sb >= defect))
+                        extra_f = can_f & (
+                            jnp.cumsum(can_f) <= credits - jnp.sum(take_f)
+                        )
+                        take_f = take_f | extra_f
+                        take_b = take_b | extra_b
+                        # commitment travels with the frame (hopped below)
+                        qdir = jnp.where(
+                            extra_b, 2, jnp.where(extra_f, 1, qdir)
+                        ).astype(jnp.int32)
+                        sf = jnp.where(starved_f, sf + 1, 0)
+                        sb = jnp.where(starved_b, sb + 1, 0)
+                    arrs, avalids, adirs = [], [], []
+                    ex = qdir if defect else None
                     if use_fwd:
-                        take_f = select(qlvl, elig & ~go_bwd)
-                        arr_f, av_f = hop(queue, take_f, axis, fwd_perm)
+                        arr_f, av_f, ad_f = hop(queue, take_f, axis,
+                                                fwd_perm, extra=ex)
                         qvalid = qvalid & ~take_f
                         arrs.append(arr_f)
                         avalids.append(av_f)
+                        adirs.append(ad_f)
                     if use_bwd:
-                        take_b = select(qlvl, elig & go_bwd)
-                        arr_b, av_b = hop(queue, take_b, axis, bwd_perm)
+                        arr_b, av_b, ad_b = hop(queue, take_b, axis,
+                                                bwd_perm, extra=ex)
                         qvalid = qvalid & ~take_b
                         arrs.append(arr_b)
                         avalids.append(av_b)
+                        adirs.append(ad_b)
                     arr = jnp.concatenate(arrs)
                     avalid = jnp.concatenate(avalids)
                     # deliver frames that reached their full destination
@@ -539,23 +689,68 @@ class Router:
                     ])
                     clvl = jnp.concatenate([arr[:, HDR_LEVEL], qlvl])
                     cadp = jnp.concatenate([route_adaptive(arr), qadp])
+                    if defect:
+                        cdir = jnp.concatenate([jnp.concatenate(adirs), qdir])
+                        qvalid, (queue, qdst, qlvl, qadp, qdir), over = \
+                            _compact_to(cvalid, q_cap, comb, cdst, clvl,
+                                        cadp, cdir)
+                        ok = ok & ~over
+                        return (queue, qdst, qlvl, qadp, qdir, qvalid,
+                                rx, rx_cnt, rx_step, ok, step_no, sf, sb)
                     qvalid, (queue, qdst, qlvl, qadp), over = _compact_to(
                         cvalid, q_cap, comb, cdst, clvl, cadp
                     )
                     ok = ok & ~over
-                    return (
-                        queue, qdst, qlvl, qadp, qvalid,
-                        rx, rx_cnt, rx_step, ok, step_no,
-                    ), None
+                    return (queue, qdst, qlvl, qadp, qvalid,
+                            rx, rx_cnt, rx_step, ok, step_no)
 
-                (queue, qdst, qlvl, qadp, qvalid,
-                 rx, rx_cnt, rx_step, ok, step_no), _ = jax.lax.scan(
-                    step,
+                if defect:
+                    init = (queue, qdst, qlvl, qadp,
+                            jnp.zeros((q_cap,), jnp.int32), qvalid,
+                            rx, rx_cnt, rx_step, ok, step_no,
+                            jnp.int32(0), jnp.int32(0))
+                else:
+                    init = (queue, qdst, qlvl, qadp, qvalid,
+                            rx, rx_cnt, rx_step, ok, step_no)
+
+                if cfg.early_exit:
+                    # stop as soon as no device anywhere still holds a frame
+                    # that needs this axis: the static bound becomes a cap,
+                    # not the price every tick pays.  `more` must be GLOBAL
+                    # (psum over the whole mesh) so every device agrees on
+                    # the trip count and the ppermutes stay matched.
+                    def more_of(c, n_axis=n_axis, myc=myc):
+                        # c[1] = qdst, c[5 or 4] = qvalid (defect carries an
+                        # extra qdir column before it)
+                        live = c[5 if defect else 4] & (
+                            ((c[1] - myc) % n_axis) != 0
+                        )
+                        return jax.lax.psum(
+                            jnp.any(live).astype(jnp.int32), axes
+                        ) > 0
+
+                    def body(c, step=step, more_of=more_of):
+                        it, c = c[0], step(c[1:-1])
+                        return (it + 1,) + c + (more_of(c),)
+
+                    def wcond(c, steps=steps):
+                        return (c[0] < steps) & c[-1]
+
+                    out = jax.lax.while_loop(
+                        wcond, body,
+                        (jnp.int32(0),) + init + (jnp.bool_(True),),
+                    )[1:-1]
+                else:
+                    out, _ = jax.lax.scan(
+                        lambda c, _, step=step: (step(c), None),
+                        init, None, length=steps,
+                    )
+                if defect:
+                    (queue, qdst, qlvl, qadp, _, qvalid,
+                     rx, rx_cnt, rx_step, ok, step_no, _, _) = out
+                else:
                     (queue, qdst, qlvl, qadp, qvalid,
-                     rx, rx_cnt, rx_step, ok, step_no),
-                    None,
-                    length=steps,
-                )
+                     rx, rx_cnt, rx_step, ok, step_no) = out
 
             # anything still queued is undeliverable (bad dst / starved link)
             ok = ok & ~jnp.any(qvalid)

@@ -261,12 +261,16 @@ def place_requests(
 
 
 def default_serve_fabric(
-    n_shards: Optional[int] = None, routing: str = "shortest"
+    n_shards: Optional[int] = None, routing: str = "shortest",
+    defect_after: int = 0,
 ):
     """The fabric ``serve_requests_sharded`` builds when none is passed:
     rank 0 ingress plus up to 7 serving shards on the available devices,
     shortest-path routed with the fused single-jit tick (pass
     ``routing="dimension"`` for the legacy +1-ring discipline).
+    ``defect_after=k`` enables congestion-aware direction defection: a
+    frame whose preferred ring direction has been credit-starved for k
+    consecutive router steps escapes to the other direction.
     Returns None when fewer than 2 ranks fit (no shard to route to)."""
     from ..fabric import Fabric, FabricConfig
 
@@ -281,7 +285,9 @@ def default_serve_fabric(
     if n_ranks < 2:
         return None
     return Fabric(
-        n_ranks=n_ranks, config=FabricConfig(frame_phits=16, routing=routing)
+        n_ranks=n_ranks,
+        config=FabricConfig(frame_phits=16, routing=routing,
+                            defect_after=defect_after),
     )
 
 
@@ -297,6 +303,7 @@ def serve_requests_sharded(
     fabric=None,
     placement: Optional[List[int]] = None,
     routing: str = "shortest",
+    defect_after: int = 0,
 ) -> List[bytes]:
     """Answer N request wires across fabric-connected serving shards.
 
@@ -318,7 +325,8 @@ def serve_requests_sharded(
     than 2 ranks (no shard to route to).
     """
     if fabric is None:
-        fabric = default_serve_fabric(n_shards, routing=routing)
+        fabric = default_serve_fabric(n_shards, routing=routing,
+                                      defect_after=defect_after)
     if fabric is None or fabric.n_ranks < 2:
         return serve_requests(
             params, cfg, wires, max_new=max_new, pad_to=pad_to,
@@ -390,6 +398,10 @@ def serve_requests_streaming(
     on_token=None,
     on_event=None,
     routing: str = "shortest",
+    defect_after: int = 0,
+    backpressure_p95: Optional[float] = None,
+    backpressure_chunks: int = 1,
+    backpressure_hold: int = 3,
 ) -> List[bytes]:
     """Answer N request wires with token-level streamed responses.
 
@@ -419,7 +431,22 @@ def serve_requests_streaming(
     event (including ``arrive_step``, the router scan step its carrying
     message arrived at — benchmarks use it to measure time-to-token
     jitter); ``routing`` picks the fabric's routing mode when no ``fabric``
-    is passed.
+    is passed, and ``defect_after=k`` additionally lets a credit-starved
+    frame defect to the opposite ring direction after k starved router
+    steps (congestion-aware routing).
+
+    ``backpressure_p95`` closes the latency feedback loop: every tick the
+    ingress reader's per-QoS-class arrive-step percentiles
+    (``StreamReader.class_arrive_stats``, sliding window) feed back into
+    each shard's ``ChunkLane``; a lane whose class p95 exceeds the
+    threshold clamps its flush rate — it *trickles* ``backpressure_chunks``
+    chunks per tick (default 1) and holds the rest — so its WRR credit
+    quota spills to the healthy tenants and a stalled tenant stops
+    inflating everyone else's queues.  ``backpressure_chunks=0`` holds
+    entirely instead of trickling, with ``backpressure_hold`` bounding the
+    consecutive fully-held flushes so a stream can never stall forever.
+    Held chunks ride later bursts in order; the streamed tokens and the
+    final wires are identical with backpressure on or off.
 
     Returns the final response wires, byte-identical to ``serve_requests``
     on the same inputs (the streamed tokens are re-serialized through the
@@ -429,7 +456,8 @@ def serve_requests_streaming(
     from ..stream import ChunkLane, StreamReader
 
     if fabric is None:
-        fabric = default_serve_fabric(n_shards, routing=routing)
+        fabric = default_serve_fabric(n_shards, routing=routing,
+                                      defect_after=defect_after)
     if fabric is None or fabric.n_ranks < 2:
         return serve_requests(
             params, cfg, wires, max_new=max_new, pad_to=pad_to,
@@ -479,7 +507,11 @@ def serve_requests_streaming(
         for k, (_, prompts) in enumerate(local_reqs):
             lvl = levels[globals_of[s][k]]
             lane = lanes.setdefault(
-                (s, lvl), ChunkLane(box, 0, list_level=lvl)
+                (s, lvl),
+                ChunkLane(box, 0, list_level=lvl,
+                          p95_threshold=backpressure_p95,
+                          clamp_chunks=backpressure_chunks,
+                          max_hold=backpressure_hold),
             )
             for j, p in enumerate(prompts):
                 batcher.submit((k, j), p)
@@ -503,6 +535,15 @@ def serve_requests_streaming(
                 m = globals_of[ev.src][k]
                 for t, tok in enumerate(ev.tokens):
                     on_token(m, j, ev.step + t, tok)
+        if backpressure_p95 is not None:
+            # close the loop: the reader's per-class p95 arrive latency
+            # clamps (or releases) each lane's flush rate for next tick;
+            # the sliding window lets a clamped tenant recover once its
+            # congested tail has drained
+            per_class = reader.class_arrive_stats(window=64)
+            for lane in lanes.values():
+                st = per_class.get(lane.list_level)
+                lane.feedback(st["p95"] if st else None)
 
     while any(b.pending or b.n_active for b in batchers.values()):
         for b in batchers.values():
@@ -521,7 +562,10 @@ def serve_requests_streaming(
             fabric.exchange()
             _pump()
 
-    # drain: complete the in-flight tick and any stragglers
+    # drain: force out any bursts a clamped lane is still holding, then
+    # complete the in-flight tick and any stragglers
+    for lane in lanes.values():
+        lane.flush(force=True)
     for _ in range(3):
         if reader.all_eos(expected):
             break
@@ -571,6 +615,15 @@ def main() -> None:
                     help="fabric routing mode for --sharded/--streaming: "
                          "per-frame shortest ring direction (default) or "
                          "the legacy +1-only dimension order")
+    ap.add_argument("--defect-after", type=int, default=0,
+                    help="congestion-aware routing: let a frame defect to "
+                         "the opposite ring direction after its preferred "
+                         "link has been credit-starved for this many "
+                         "consecutive router steps (0 = static shortest)")
+    ap.add_argument("--backpressure-p95", type=float, default=None,
+                    help="for --streaming: clamp a tenant lane's flush "
+                         "rate while its QoS class's p95 arrive latency "
+                         "(router steps) exceeds this threshold")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -602,6 +655,8 @@ def main() -> None:
             params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
             slots=args.slots, n_shards=args.n_shards,
             overlap=not args.no_overlap, routing=args.routing,
+            defect_after=args.defect_after,
+            backpressure_p95=args.backpressure_p95,
             on_token=lambda m, j, step, tok: first_tok_t.append(time.time())
             if not first_tok_t else None,
         )
@@ -609,6 +664,7 @@ def main() -> None:
         resp_wires = serve_requests_sharded(
             params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
             slots=args.slots, n_shards=args.n_shards, routing=args.routing,
+            defect_after=args.defect_after,
         )
     else:
         resp_wires = serve_requests(

@@ -31,6 +31,7 @@ token = one decode tick + one fabric tick, not the whole generation).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -42,8 +43,15 @@ def arrive_stats(steps: Iterable[int]) -> Dict[str, float]:
     tracks hop count + queueing, ``p95``/``max`` expose the tail a
     far-shard or starved tenant produces, and ``jitter`` is the stddev —
     the time-to-token wobble the shortest-path router shrinks.  Shared by
-    :meth:`StreamReader.arrive_stats` and the benchmarks so the two can
-    never diverge."""
+    :meth:`StreamReader.arrive_stats`, :meth:`Fabric.class_arrive_stats`,
+    and the benchmarks so the producers and consumers of the backpressure
+    feedback loop can never disagree on what "p95" means.
+
+    ``p95`` is nearest-rank with a CEIL rank (``ceil(0.95 * n)``): the
+    smallest value with >= 95% of the trace at or below it.  The old
+    floor-indexed ``arr[int(0.95 * n)]`` was biased one rank high — at
+    n=20 it reported the maximum as "p95", inflating the very tail signal
+    the lane scheduler clamps on."""
     arr = sorted(steps)
     if not arr:
         return {"n": 0, "mean": 0.0, "p95": 0.0, "max": 0.0, "jitter": 0.0}
@@ -53,7 +61,7 @@ def arrive_stats(steps: Iterable[int]) -> Dict[str, float]:
     return {
         "n": n,
         "mean": mean,
-        "p95": float(arr[min(n - 1, int(0.95 * n))]),
+        "p95": float(arr[min(n - 1, math.ceil(0.95 * n) - 1)]),
         "max": float(arr[-1]),
         "jitter": var ** 0.5,
     }
@@ -69,7 +77,11 @@ class StreamEvent:
     tokens: Tuple[int, ...]
     eos: bool
     ok: bool
-    arrive_step: int = 0  # router scan step of the carrying message
+    #: router scan step of the carrying message; None when the delivery
+    #: carried no latency observation (never fabricated as 0 — a fake
+    #: zero-latency sample would deflate the mean/p95 the backpressure
+    #: scheduler feeds on and inflate jitter)
+    arrive_step: Optional[int] = None
 
 
 class StreamWriter:
@@ -99,26 +111,87 @@ class StreamWriter:
 
 class ChunkLane:
     """Batches one tick's chunks from one rank to one destination (one QoS
-    class) into a single fabric message."""
+    class) into a single fabric message.
 
-    def __init__(self, mailbox, dst: int, list_level: int = 1):
+    **Backpressure-fed flush clamping** (``p95_threshold``): the reader
+    side surfaces per-QoS-class arrive-step percentiles
+    (:meth:`StreamReader.class_arrive_stats` /
+    ``Fabric.class_arrive_stats``); feeding them back via :meth:`feedback`
+    clamps the lane's flush rate while its class's p95 in-fabric latency
+    sits above the threshold.  A clamped lane *trickles*: each flush mails
+    only its oldest ``clamp_chunks`` chunks (default 1) and holds the rest
+    for later bursts, so its QoS class presents almost no frames at the
+    router's inject step and its WRR credit quota spills to the other
+    classes — a stalled tenant stops inflating everyone else's queues,
+    while its own stream keeps trickling forward (never a stop-then-dump
+    that would slam a multi-tick mega-burst into the link).  With
+    ``clamp_chunks=0`` the lane holds entirely, bounded by ``max_hold``
+    consecutive held flushes.  Held chunks ride later bursts in write
+    order, so the reader sees the same step sequence and reassembled
+    tokens whether or not the clamp ever engaged.
+    """
+
+    def __init__(self, mailbox, dst: int, list_level: int = 1,
+                 p95_threshold: Optional[float] = None,
+                 clamp_chunks: int = 1, max_hold: int = 3):
         self.mailbox = mailbox
         self.dst = dst
         self.list_level = list_level
+        self.p95_threshold = p95_threshold
+        self.clamp_chunks = clamp_chunks
+        self.max_hold = max_hold
         self._pending: List[TokenChunk] = []
+        self._clamped = False
+        self._held = 0  # consecutive fully-held flushes
+        self.holds = 0  # flushes that held chunks back (observability)
+        self.flushes = 0  # bursts actually mailed
+
+    @property
+    def clamped(self) -> bool:
+        """True while the reader-fed latency signal clamps this lane."""
+        return self._clamped
+
+    def feedback(self, p95: Optional[float]) -> None:
+        """Feed the reader's p95 arrive latency for this lane's QoS class;
+        clamps the flush rate while it exceeds ``p95_threshold``.  ``None``
+        (no observation yet) never clamps."""
+        self._clamped = (
+            self.p95_threshold is not None
+            and p95 is not None
+            and p95 > self.p95_threshold
+        )
 
     def writer(self, stream_id: int) -> StreamWriter:
         return StreamWriter(self, stream_id)
 
-    def flush(self) -> int:
-        """Serialize every pending chunk (ONE batched Pallas SER pass) and
-        mail the burst.  Returns the number of chunks sent."""
+    def flush(self, force: bool = False) -> int:
+        """Serialize pending chunks (ONE batched Pallas SER pass) and mail
+        the burst.  A clamped lane trickles its oldest ``clamp_chunks``
+        and holds the rest (or holds everything when ``clamp_chunks=0``,
+        up to ``max_hold`` consecutive flushes).  Returns the number of
+        chunks sent; ``force=True`` bypasses the clamp (the end-of-serve
+        drain)."""
         if not self._pending:
             return 0
-        chunks, self._pending = self._pending, []
+        if self._clamped and not force:
+            if self.clamp_chunks <= 0:  # full hold, bounded by max_hold
+                if self._held < self.max_hold:
+                    self._held += 1
+                    self.holds += 1
+                    return 0
+                chunks, self._pending = self._pending, []
+            else:  # trickle: oldest chunks ride, the rest wait
+                chunks = self._pending[: self.clamp_chunks]
+                self._pending = self._pending[self.clamp_chunks:]
+                if self._pending:
+                    self.holds += 1
+        else:
+            chunks, self._pending = self._pending, []
+        self._held = 0
         self.mailbox.send(
             self.dst, encode_chunk_burst(chunks), list_level=self.list_level
         )
+        self.flushes += 1
         return len(chunks)
 
 
@@ -132,8 +205,11 @@ class StreamState:
     next_step: int = 0
     level: int = 1
     #: router scan step each of this stream's chunks arrived at (one entry
-    #: per chunk, in step order) — the per-tick fabric latency trace that
-    #: makes time-to-token *jitter* measurable, not just the mean
+    #: per OBSERVED chunk, in step order) — the per-tick fabric latency
+    #: trace that makes time-to-token *jitter* measurable, not just the
+    #: mean.  Deliveries that carry no ``arrive_step`` are skipped, never
+    #: recorded as 0 (a fake zero-latency sample deflates mean/p95 and
+    #: inflates jitter — the signal the backpressure scheduler feeds on).
     arrive_steps: List[int] = field(default_factory=list)
 
 
@@ -156,6 +232,7 @@ class StreamReader:
                 if not clean:
                     self.unattributed.append(d)
                 continue
+            arrive = getattr(d, "arrive_step", None)
             for c in chunks:
                 key = (d.src, c.stream_id)
                 st = self.streams.setdefault(key, StreamState())
@@ -167,11 +244,15 @@ class StreamReader:
                 st.next_step = c.step + 1
                 st.tokens.extend(c.tokens)
                 st.eos = st.eos or c.eos
-                st.arrive_steps.append(getattr(d, "arrive_step", 0))
+                if arrive is not None:
+                    # a delivery without the field contributes NO latency
+                    # sample (recording 0 would claim an impossible
+                    # zero-step arrival and drag mean/p95 down)
+                    st.arrive_steps.append(arrive)
                 events.append(
                     StreamEvent(
                         d.src, c.stream_id, c.step, c.tokens, c.eos, st.ok,
-                        getattr(d, "arrive_step", 0),
+                        arrive,
                     )
                 )
         return events
@@ -183,6 +264,23 @@ class StreamReader:
         return arrive_stats(
             s for st in self.streams.values() for s in st.arrive_steps
         )
+
+    def class_arrive_stats(
+        self, window: Optional[int] = None
+    ) -> Dict[int, Dict[str, float]]:
+        """In-fabric latency per ListLevel (QoS tenant tag): ``{level:
+        {n, mean, p95, max, jitter}}``.  This is the reader-side signal the
+        backpressure loop feeds into each :class:`ChunkLane` — a lane whose
+        level's p95 sits above its threshold clamps its flush rate and
+        yields its WRR credits to the other classes.  ``window`` restricts
+        each stream to its most recent samples so a clamped tenant can
+        *recover* once its tail drains instead of being haunted by old
+        congestion forever."""
+        per: Dict[int, List[int]] = {}
+        for st in self.streams.values():
+            tr = st.arrive_steps[-window:] if window else st.arrive_steps
+            per.setdefault(st.level, []).extend(tr)
+        return {lvl: arrive_stats(tr) for lvl, tr in sorted(per.items())}
 
     def all_eos(self, expected: Optional[Iterable[Tuple[int, int]]] = None) -> bool:
         """True when every stream (or every ``expected`` key) saw its EOS."""

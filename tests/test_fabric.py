@@ -429,67 +429,225 @@ def test_tick_bucket_memoized_and_logged_once(caplog):
 # ---------------------------------------------------------------------------
 
 
+#: the three routing disciplines that must deliver byte-identical message
+#: sets: legacy +1-only, static per-frame shortest path, and shortest path
+#: with congestion-aware direction defection
+ROUTING_MODES = (
+    dict(routing="dimension"),
+    dict(routing="shortest"),
+    dict(routing="shortest", defect_after=1),
+)
+
+
+def _seed_near_seq_wrap(fab):
+    """Start every (src, dst) stream 3 frames before the u16 seq wrap so a
+    multi-tick run crosses it."""
+    for s in range(fab.n_ranks):
+        for d in range(fab.n_ranks):
+            fab._tx_seq[s][d] = SEQ_MOD - 3
+            fab._rx_seq[d][s] = SEQ_MOD - 3
+
+
 def test_routing_modes_deliver_identical_messages_property():
-    """Satellite: under random sends, credits=1, and QoS credit classes,
-    shortest-path and dimension-order routing must deliver byte-identical
-    message sets — the direction choice changes hop paths and arrival
-    interleavings, never wires, CRC verdicts, or per-(src, dst) order."""
+    """Satellite: under random sends, QoS credit classes, multiple ticks,
+    and a u16 seq wrap, dimension-order, static shortest-path, and
+    defection-enabled shortest-path routing must deliver byte-identical
+    message sets — direction choices (static or congestion-driven) change
+    hop paths and arrival interleavings, never wires, CRC verdicts, or
+    per-(src, dst) order."""
     hypothesis = pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @st.composite
-    def burst(draw):
-        n_sends = draw(st.integers(1, 10))
-        sends = []
-        for _ in range(n_sends):
-            s = draw(st.integers(0, 7))
-            d = draw(st.integers(0, 7))
-            nbytes = draw(st.integers(1, 64))
-            lvl = draw(st.integers(1, 4))
-            payload = bytes(
-                draw(st.lists(st.integers(0, 255), min_size=nbytes,
-                              max_size=nbytes))
-            )
-            sends.append((s, d, payload, lvl))
-        return sends
+    def ticks(draw):
+        out = []
+        for _ in range(draw(st.integers(1, 2))):
+            n_sends = draw(st.integers(1, 8))
+            sends = []
+            for _ in range(n_sends):
+                s = draw(st.integers(0, 7))
+                d = draw(st.integers(0, 7))
+                nbytes = draw(st.integers(1, 64))
+                lvl = draw(st.integers(1, 4))
+                payload = bytes(
+                    draw(st.lists(st.integers(0, 255), min_size=nbytes,
+                                  max_size=nbytes))
+                )
+                sends.append((s, d, payload, lvl))
+            out.append(sends)
+        return out
 
-    @settings(max_examples=12, deadline=None)
-    @given(burst())
-    def check(sends):
+    @settings(max_examples=8, deadline=None)
+    @given(ticks())
+    def check(tick_sends):
         got = {}
-        for routing in ("dimension", "shortest"):
+        for cfg in ROUTING_MODES:
             fab = Fabric(n_ranks=8, config=FabricConfig(
-                frame_phits=1, credits=2, qos_weights=(2, 1),
-                routing=routing))
-            got[routing] = _exchange_and_drain(fab, sends)
+                frame_phits=1, credits=2, qos_weights=(2, 1), **cfg))
+            _seed_near_seq_wrap(fab)  # every stream crosses the u16 wrap
+            drained = []
+            for sends in tick_sends:
+                drained.append(_exchange_and_drain(fab, sends))
+            got[tuple(cfg.items())] = drained
         # per-rank multisets of (src, wire, ok, level) must match; within
         # one (src, dst) stream even the order must match (FIFO per path)
-        for r in range(8):
-            dim, sp = got["dimension"][r], got["shortest"][r]
-            assert sorted(dim) == sorted(sp)
-            for s in range(8):
-                assert [x for x in dim if x[0] == s] == \
-                       [x for x in sp if x[0] == s]
+        base_key, *others = got
+        for other in others:
+            for base_tick, other_tick in zip(got[base_key], got[other]):
+                for r in range(8):
+                    dim, alt = base_tick[r], other_tick[r]
+                    assert sorted(dim) == sorted(alt)
+                    for s in range(8):
+                        assert [x for x in dim if x[0] == s] == \
+                               [x for x in alt if x[0] == s]
 
     check()
 
 
 def test_routing_modes_identical_under_single_credit(rng):
-    """credits=1 maximally serializes both schedulers; the delivered bytes
-    still cannot differ between routing modes."""
+    """credits=1 maximally serializes every scheduler (and makes defection
+    trivially reachable); the delivered bytes still cannot differ between
+    the three routing modes, across two ticks that cross the seq wrap."""
+    outs = []
+    for cfg in ROUTING_MODES:
+        fab = Fabric(n_ranks=8, config=FabricConfig(
+            frame_phits=1, credits=1, **cfg))
+        _seed_near_seq_wrap(fab)
+        rng_ = np.random.default_rng(7)
+        drained = []
+        for _ in range(2):
+            sends = []
+            for s in range(8):
+                d = int(rng_.integers(0, 8))
+                w = rng_.integers(0, 256, int(rng_.integers(8, 40)),
+                                  dtype=np.uint8).tobytes()
+                sends.append((s, d, w, 1 + (s % 2)))
+            drained.append(_exchange_and_drain(fab, sends))
+        outs.append([
+            {r: sorted(v) for r, v in tick.items()} for tick in drained
+        ])
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_defection_escapes_starved_link():
+    """One saturated +1 link: a heavy burst 0 -> 1 starves the light
+    tenant's 0 -> 4 frames, which share the same outgoing link.  With
+    ``defect_after`` set the light frames defect to the idle -1 ring after
+    the starvation threshold, arriving strictly earlier — and the wires
+    stay byte-identical in both modes."""
+    wires = {}
+
+    def run(defect_after):
+        fab = Fabric(n_ranks=8, config=FabricConfig(
+            frame_phits=2, credits=1, routing="shortest",
+            defect_after=defect_after))
+        for i in range(6):
+            fab.send(0, 1, bytes([i]) * 200, list_level=2)
+        for i in range(4):
+            fab.send(0, 4, bytes([64 + i]) * 200, list_level=1)
+        fab.exchange()
+        light = fab.mailbox(4).recv()
+        heavy = fab.mailbox(1).recv()
+        assert all(d.ok for d in light + heavy)
+        got = ([d.wire for d in heavy], [d.wire for d in light])
+        wires.setdefault("ref", got)
+        assert got == wires["ref"]  # defection never changes bytes
+        return max(d.arrive_step for d in light)
+
+    static_last = run(0)
+    defect_last = run(2)
+    assert defect_last < static_last  # escaped the starved link
+
+
+def test_defection_idle_fabric_matches_static_paths():
+    """With no congestion nothing ever starves, so defection must leave
+    arrival steps exactly at the static shortest-path values."""
+    steps = {}
+    for k in (0, 2):
+        fab = Fabric(n_ranks=8, config=FabricConfig(
+            frame_phits=2, credits=4, routing="shortest", defect_after=k))
+        for d in range(1, 8):
+            fab.send(0, d, bytes([d]) * 32)
+        fab.exchange()
+        steps[k] = {
+            d: fab.mailbox(d).recv()[0].arrive_step for d in range(1, 8)
+        }
+    assert steps[0] == steps[2]
+
+
+def test_early_exit_matches_bounded_scan(rng):
+    """The early-exit while_loop must deliver exactly what the full
+    static-bound scan delivers (same bytes, same arrival steps)."""
     sends = []
     for s in range(8):
-        d = int(rng.integers(0, 8))
-        w = rng.integers(0, 256, int(rng.integers(8, 40)),
-                         dtype=np.uint8).tobytes()
-        sends.append((s, d, w, 1 + (s % 2)))
+        for _ in range(2):
+            d = int(rng.integers(0, 8))
+            w = rng.integers(0, 256, int(rng.integers(1, 80)),
+                             dtype=np.uint8).tobytes()
+            sends.append((s, d, w, int(rng.integers(1, 4))))
     outs = []
-    for routing in ("dimension", "shortest"):
+    for early in (True, False):
         fab = Fabric(n_ranks=8, config=FabricConfig(
-            frame_phits=1, credits=1, routing=routing))
-        outs.append(_exchange_and_drain(fab, sends))
-    assert {r: sorted(v) for r, v in outs[0].items()} == \
-           {r: sorted(v) for r, v in outs[1].items()}
+            frame_phits=2, credits=2, early_exit=early))
+        for s_, d_, w_, lvl in sends:
+            fab.send(s_, d_, w_, list_level=lvl)
+        fab.exchange()
+        outs.append({
+            r: [(dl.src, dl.wire, dl.ok, dl.list_level, dl.arrive_step)
+                for dl in fab.mailbox(r).recv()]
+            for r in range(8)
+        })
+    assert outs[0] == outs[1]
+
+
+def test_defect_after_config_validation():
+    with pytest.raises(ValueError, match="defect_after"):
+        FabricConfig(defect_after=-1)
+    with pytest.raises(ValueError, match="shortest"):
+        FabricConfig(routing="dimension", defect_after=2)
+    assert FabricConfig(defect_after=3).defection
+    assert not FabricConfig().defection
+
+
+def test_max_ranks_enforced_at_construction():
+    """Satellite: since the route word's src field shrank to u7 (PR 4),
+    fabrics beyond MAX_RANKS=128 must be rejected with a clear error at
+    construction instead of silently aliasing ranks mod 128."""
+    from types import SimpleNamespace
+
+    from repro.fabric import MAX_RANKS
+    from repro.fabric.router import Router
+
+    assert MAX_RANKS == 128
+    # Fabric(n_ranks=...) fails BEFORE trying to allocate devices
+    with pytest.raises(ValueError, match="MAX_RANKS"):
+        Fabric(n_ranks=MAX_RANKS + 1)
+    # Router checks any mesh handed to it directly; __init__ only reads
+    # the shape, so a stub mesh exercises the boundary without 129 devices
+    def stub(n):
+        return SimpleNamespace(axis_names=("fx",), shape={"fx": n})
+
+    with pytest.raises(ValueError, match="MAX_RANKS"):
+        Router(stub(MAX_RANKS + 1))
+    r = Router(stub(MAX_RANKS))  # the boundary itself is legal
+    assert r.n_ranks == MAX_RANKS
+    assert r.hops(0, MAX_RANKS - 1) == MAX_RANKS - 1
+
+
+def test_list_level_validated(fab):
+    """Satellite: out-of-range ListLevels would wrap through the u8 header
+    budget and alias another tenant's QoS class (the router keys credit
+    classes on level % n_classes) — reject them at send() with a clear
+    error, like the existing rank/bytes checks."""
+    box = fab.mailbox(0)
+    for bad in (-1, 256, 1000, 1.5, "2", None):
+        with pytest.raises(ValueError, match="list_level"):
+            box.send(1, b"payload", list_level=bad)
+    n_pending = len(fab._pending)
+    box.send(1, b"ok-min", list_level=0)  # boundary values are legal
+    box.send(1, b"ok-max", list_level=255)
+    assert len(fab._pending) == n_pending + 2
+    fab._pending = fab._pending[:n_pending]  # don't leak into other tests
 
 
 # ---------------------------------------------------------------------------

@@ -141,6 +141,46 @@ def test_stream_reader_arrive_stats():
     assert reader.streams[(1, 9)].arrive_steps == [2, 2, 6, 2]
 
 
+def test_arrive_stats_p95_ceil_rank():
+    """Satellite: p95 is nearest-rank with a CEIL rank — the smallest
+    value with >= 95% of the trace at or below it.  The old floor index
+    ``arr[int(0.95 * n)]`` was one rank high (at n=20 it reported the
+    max).  Pinned for n in {1, 10, 20, 100} on arr = 1..n."""
+    from repro.stream import arrive_stats
+
+    for n, want in ((1, 1.0), (10, 10.0), (20, 19.0), (100, 95.0)):
+        st = arrive_stats(range(1, n + 1))
+        assert st["p95"] == want, (n, st["p95"])
+        assert st["max"] == float(n)
+    # order-independent: a shuffled trace reports the same percentile
+    assert arrive_stats([5, 1, 4, 2, 3] * 4)["p95"] == 5.0
+    assert arrive_stats([])["p95"] == 0.0
+
+
+def test_missing_arrive_step_not_recorded_as_zero():
+    """Satellite: a delivery that lacks ``arrive_step`` contributes NO
+    latency sample — recording 0 would claim an impossible zero-step
+    arrival, deflating mean/p95 and inflating jitter (the very signal the
+    backpressure scheduler feeds on)."""
+    class BareDelivery:  # a duck-typed delivery without the field
+        def __init__(self, src, wire):
+            self.src, self.wire = src, wire
+            self.ok, self.list_level = True, 1
+
+    reader = StreamReader()
+    evs = reader.feed([BareDelivery(1, encode_token_chunk(9, 0, (7,)))])
+    assert evs[0].arrive_step is None  # surfaced as unknown, not 0
+    assert reader.streams[(1, 9)].arrive_steps == []
+    assert reader.arrive_stats()["n"] == 0
+    # mixing observed deliveries in: only the observed ones count
+    reader.feed([Delivery(1, encode_token_chunk(9, 1, (8,)), arrive_step=4)])
+    reader.feed([BareDelivery(1, encode_token_chunk(9, 2, (9,)))])
+    st = reader.arrive_stats()
+    assert st["n"] == 1 and st["mean"] == 4.0 and st["jitter"] == 0.0
+    assert reader.streams[(1, 9)].tokens == [7, 8, 9]
+    assert reader.streams[(1, 9)].ok  # missing latency is not corruption
+
+
 def test_stream_reader_flags_step_gap():
     """A lost chunk (step gap) or a chunk after EOS marks the stream
     corrupt even when every frame CRC passes."""
@@ -224,6 +264,94 @@ def test_qos_classes_deliver_bit_exact(rng):
         assert len(got) == 8
         for dl in got:
             assert dl.ok and dl.wire == msgs[(dl.src, d)]
+
+
+# ---------------------------------------------------------------------------
+# backpressure-fed lane scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_lane_clamp_trickles_and_recovers(fab):
+    """A clamped lane trickles its oldest chunk per flush and holds the
+    rest; releasing the clamp flushes the backlog; tokens reassemble
+    identically to an unclamped run."""
+    lane = ChunkLane(fab.mailbox(1), 0, list_level=2, p95_threshold=3.0)
+    w = lane.writer(5)
+    w.write((1,))
+    w.write((2,))
+    w.write((3,))
+    assert not lane.clamped
+    lane.feedback(5.0)  # reader-side p95 above threshold -> clamp
+    assert lane.clamped
+    assert lane.flush() == 1 and lane.holds == 1  # oldest chunk trickles
+    assert lane.flush() == 1 and lane.holds == 2
+    lane.feedback(2.0)  # congestion drained -> release
+    assert not lane.clamped
+    w.write((4,), eos=True)
+    assert lane.flush() == 2  # backlog + fresh chunk ride together
+    fab.exchange()
+    reader = StreamReader()
+    reader.feed(fab.mailbox(0).recv())
+    st = reader.streams[(1, 5)]
+    assert st.ok and st.eos and st.tokens == [1, 2, 3, 4]
+
+
+def test_lane_full_hold_bounded_by_max_hold(fab):
+    """clamp_chunks=0 holds entirely; max_hold bounds consecutive holds so
+    a stream can never stall forever; force=True bypasses the clamp."""
+    lane = ChunkLane(fab.mailbox(2), 0, p95_threshold=1.0, clamp_chunks=0,
+                     max_hold=2)
+    w = lane.writer(9)
+    lane.feedback(9.0)
+    for i in range(2):
+        w.write((i,))
+        assert lane.flush() == 0  # held
+    assert lane.holds == 2
+    w.write((2,))
+    assert lane.flush() == 3  # max_hold reached: accumulated burst goes out
+    w.write((3,), eos=True)
+    assert lane.flush(force=True) == 1  # force bypasses the active clamp
+    fab.exchange()
+    reader = StreamReader()
+    reader.feed(fab.mailbox(0).recv())
+    assert reader.streams[(2, 9)].tokens == [0, 1, 2, 3]
+    assert reader.streams[(2, 9)].ok and reader.streams[(2, 9)].eos
+
+
+def test_lane_feedback_none_never_clamps(fab):
+    """No observation (None) and no threshold both mean: never clamp."""
+    lane = ChunkLane(fab.mailbox(1), 0, p95_threshold=4.0)
+    lane.feedback(None)
+    assert not lane.clamped
+    unthresholded = ChunkLane(fab.mailbox(1), 0)
+    unthresholded.feedback(99.0)
+    assert not unthresholded.clamped
+
+
+def test_class_arrive_stats_reader_and_mailbox(fab):
+    """Both ends of the feedback loop surface per-class percentiles: the
+    StreamReader per ListLevel, the Fabric/Mailbox per scheduler class."""
+    lane_hot = ChunkLane(fab.mailbox(1), 0, list_level=2)
+    lane_cool = ChunkLane(fab.mailbox(3), 0, list_level=1)
+    lane_hot.writer(1).write((11,), eos=True)
+    lane_cool.writer(2).write((22,), eos=True)
+    lane_hot.flush()
+    lane_cool.flush()
+    fab.exchange()
+    got = fab.mailbox(0).recv()
+    reader = StreamReader()
+    reader.feed(got)
+    per_level = reader.class_arrive_stats()
+    assert set(per_level) == {1, 2}
+    assert all(s["n"] >= 1 and s["p95"] >= 1 for s in per_level.values())
+    # windowed view restricts to each stream's most recent samples
+    assert reader.class_arrive_stats(window=1)[1]["n"] == 1
+    # mailbox side: fab has no qos_weights -> single class 0 aggregates
+    # both tenants' deliveries (class = level % n_classes)
+    per_class = fab.mailbox(0).arrive_stats()
+    assert set(per_class) == {0}
+    assert per_class[0]["n"] == 2
+    assert per_class[0]["max"] == max(s["max"] for s in per_level.values())
 
 
 # ---------------------------------------------------------------------------
@@ -326,6 +454,28 @@ def test_streaming_overlap_identical(serve_setup):
     a = serve_requests_streaming(params, cfg, wires, overlap=True, **kw)
     b = serve_requests_streaming(params, cfg, wires, overlap=False, **kw)
     assert a == b
+
+
+def test_streaming_serve_backpressure_and_defection_token_identical(
+    serve_setup,
+):
+    """Closing the backpressure loop (even absurdly tight: threshold 0
+    clamps every lane from the first observation) and enabling direction
+    defection delay bursts, never change tokens: the final wires stay
+    byte-identical to the local batched plane."""
+    from repro.launch.serve import serve_requests, serve_requests_streaming
+
+    params, cfg, wires = serve_setup
+    batched = serve_requests(params, cfg, wires, max_new=4, pad_to=8, slots=4)
+    events = []
+    streamed = serve_requests_streaming(
+        params, cfg, wires, max_new=4, pad_to=8, slots=4, n_shards=3,
+        qos_levels=[1 + (i % 2) for i in range(len(wires))],
+        defect_after=1, backpressure_p95=0.0,
+        on_event=events.append,
+    )
+    assert streamed == batched
+    assert events and all(ev.arrive_step is not None for ev in events)
 
 
 def test_streaming_multi_hop_qos_tenants(serve_setup):
