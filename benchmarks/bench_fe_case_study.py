@@ -23,8 +23,7 @@ import numpy as np
 
 from repro.core import (
     ClientSchema, DesFSM, Schema, SerFSM, build_rom, msg_to_des_tokens,
-    random_message, ser_sw_to_hw, strip_for_ser, tokens_to_msg,
-)
+    ser_sw_to_hw, strip_for_ser, )
 from .common import Table
 
 PHIT = 16

@@ -14,7 +14,7 @@ from typing import Dict, List
 
 from repro.core import (
     ClientSchema, DesFSM, Schema, SerFSM, build_rom, des_hw_to_sw,
-    msg_to_des_tokens, ser_sw_to_hw, strip_for_ser,
+    ser_sw_to_hw, strip_for_ser,
 )
 from .common import Table
 

@@ -9,13 +9,12 @@ from __future__ import annotations
 
 from typing import List
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.vectorized import decode_message, wire_to_u8
-from repro.data.pipeline import batch_plan, decode_batch, pack_documents, serialize_batch
+from repro.data.pipeline import batch_plan, pack_documents, serialize_batch
 from repro.data import SyntheticCorpus
 from repro.kernels.ops import decode_message_kernel, wire_to_u32
 from repro.runtime import frame_stream, unframe_stream

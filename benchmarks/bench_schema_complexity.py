@@ -16,8 +16,7 @@ anti-pattern), whose op count grows with total field count.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Tuple
+from typing import List
 
 import numpy as np
 
@@ -25,7 +24,6 @@ import jax
 
 from repro.core import Schema, build_rom, build_plan, random_message, ser_sw_to_hw
 from repro.core.vectorized import decode_message, wire_to_u8
-from repro.kernels.ops import decode_message_kernel, wire_to_u32
 from .common import Table, time_call
 
 

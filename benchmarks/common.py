@@ -4,7 +4,7 @@ from __future__ import annotations
 import csv
 import io
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List
 
 
 def time_call(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:

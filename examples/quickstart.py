@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import (
     ClientSchema, DesFSM, Schema, SerFSM, build_plan, build_rom,
-    lanes_to_int, msg_to_des_tokens, ser_sw_to_hw, strip_for_ser,
+    lanes_to_int, ser_sw_to_hw, strip_for_ser,
     tokens_to_msg,
 )
 from repro.kernels import decode_message_kernel, wire_to_u32

@@ -11,9 +11,7 @@ Full ~100M config (slower):
   PYTHONPATH=src python examples/train_lm.py --steps 300 --full
 """
 import argparse
-import dataclasses
 
-from repro.configs import get_config, smoke_config
 from repro.configs.base import ModelConfig
 from repro.launch.train import train_loop
 

@@ -1,9 +1,7 @@
 """Splice the generated roofline table into EXPERIMENTS.md and append the
 hillclimb + multi-pod summaries from the tagged dryrun JSONs."""
 import glob
-import io
 import json
-import os
 import subprocess
 import sys
 

@@ -1,0 +1,145 @@
+"""Shared primitive validation rules: runtime checks == analyzer findings.
+
+These functions are the SINGLE source of truth for checks that used to be
+duplicated across ``Fabric.__init__`` / ``Router.__init__`` (the
+MAX_RANKS route-word budget), ``Fabric.send`` (the u8 ``list_level``
+lane), and ``FabricConfig.__post_init__`` (the config invariants).  The
+runtime call sites raise exactly the message a function here returns and
+the analyzer wraps the same message in a :class:`~.findings.Finding`, so
+the error a user hits at runtime and the finding ``python -m
+repro.analysis`` reports are literally the same words — and each check is
+tested once.
+
+Import discipline: ``fabric/router.py`` and ``fabric/mailbox.py`` import
+this module at module top, so it must be importable BEFORE
+``repro.fabric`` finishes initializing — anything from the fabric package
+is therefore imported lazily inside the functions (by call time the
+packages are fully loaded).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .findings import Finding, finding
+
+#: u8 budget of the frame header's ListLevel lane (``frames.HDR_LEVEL``)
+MAX_LIST_LEVEL = 255
+
+
+def max_ranks_error(n_ranks: int) -> Optional[str]:
+    """Unified MAX_RANKS message (rule ``fabric-max-ranks``), raised
+    verbatim by both ``Fabric.__init__`` and ``Router.__init__``."""
+    from ..fabric.frames import MAX_RANKS
+
+    if n_ranks <= MAX_RANKS:
+        return None
+    return (
+        f"fabric of {n_ranks} ranks exceeds MAX_RANKS={MAX_RANKS}: the "
+        f"route word's src field is a u7 lane (frames.py packs "
+        f"adaptive:u1|src:u7|dst:u8|seq:u16), so ranks beyond {MAX_RANKS} "
+        f"would silently alias rank (r % {MAX_RANKS}) and misdeliver "
+        f"frames"
+    )
+
+
+def list_level_error(list_level) -> Optional[str]:
+    """Unified ``list_level`` range message (rule ``fabric-list-level``),
+    raised verbatim by ``Fabric.send``: the ListLevel header lane is
+    u8-budgeted, and an out-of-range level would wrap silently and alias
+    another tenant's QoS class (the router keys credit classes on
+    ``level % n_classes``)."""
+    if isinstance(list_level, (int, np.integer)) and not isinstance(
+        list_level, bool
+    ) and 0 <= int(list_level) <= MAX_LIST_LEVEL:
+        return None
+    return (
+        f"list_level must be an int in [0, {MAX_LIST_LEVEL}], got "
+        f"{list_level!r}"
+    )
+
+
+def fabric_config_findings(
+    frame_phits: int,
+    credits: int,
+    routing: str,
+    defect_after: int,
+    qos_weights: Optional[Tuple[int, ...]],
+    sizes: Optional[Sequence[int]] = None,
+    location: str = "FabricConfig",
+) -> List[Finding]:
+    """Every static finding derivable from FabricConfig fields alone.
+
+    ``FabricConfig.__post_init__`` raises the first ERROR's message, so
+    runtime construction and the analyzer agree word for word; WARN-level
+    findings (quota floors, defection bounds — the latter only when the
+    mesh ``sizes`` are known) surface exclusively through the analyzer.
+    """
+    fs: List[Finding] = []
+    if frame_phits < 1 or credits < 1:
+        fs.append(finding(
+            "fabric-config-positive", location,
+            f"frame_phits/credits must be >= 1, got "
+            f"{frame_phits}/{credits}",
+        ))
+    if routing not in ("shortest", "dimension"):
+        fs.append(finding(
+            "fabric-routing-mode", location,
+            f"routing must be 'shortest' or 'dimension', got {routing!r}",
+        ))
+    if defect_after < 0:
+        fs.append(finding(
+            "fabric-defect-config", location,
+            f"defect_after must be >= 0, got {defect_after}",
+        ))
+    if defect_after > 0 and routing == "dimension":
+        fs.append(finding(
+            "fabric-defect-config", location,
+            "defect_after needs routing='shortest': only frames whose "
+            "route word carries the adaptive bit may defect, and "
+            "dimension-order frames never do",
+        ))
+    if qos_weights is not None:
+        if len(qos_weights) < 1 or any(w < 1 for w in qos_weights):
+            fs.append(finding(
+                "fabric-qos-weights", location,
+                f"qos_weights must be positive, got {qos_weights}",
+            ))
+        elif credits >= 1:
+            if credits < len(qos_weights):
+                fs.append(finding(
+                    "fabric-credit-deadlock", location,
+                    f"need credits >= qos classes so every class holds at "
+                    f"least one credit, got credits={credits} for "
+                    f"{len(qos_weights)} classes",
+                ))
+            else:
+                # largest-remainder zero-quota classes: a class whose raw
+                # share floors to 0 survives only by the >= 1 bump
+                total = sum(qos_weights)
+                floored = [
+                    c for c, w in enumerate(qos_weights)
+                    if math.floor(credits * w / total) == 0
+                ]
+                if floored:
+                    fs.append(finding(
+                        "fabric-qos-quota-floor", location,
+                        f"classes {floored} earn a zero largest-remainder "
+                        f"share of {credits} credits under weights "
+                        f"{tuple(qos_weights)} and run on the 1-credit "
+                        f"floor",
+                    ))
+    if (
+        defect_after > 0 and routing == "shortest" and sizes
+        and any(n > 1 and defect_after >= n for n in sizes)
+    ):
+        fs.append(finding(
+            "fabric-defect-bound", location,
+            f"defect_after={defect_after} is >= a ring size in "
+            f"{tuple(sizes)}: a starved frame waits longer than riding "
+            f"the whole ring the long way, and the scan bound inflates "
+            f"past the dimension-order worst case",
+        ))
+    return fs

@@ -7,8 +7,7 @@ CPU-runnable variant of the same family for tests.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
 

@@ -27,7 +27,7 @@ Directions implemented (paper Figures 8-10):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 from .framing import (
@@ -35,7 +35,6 @@ from .framing import (
     DEFAULT_PHIT_BYTES,
     FrameHeader,
     FrameWriter,
-    header_wire_bytes,
     payload_wire_bytes,
 )
 from .schema_tree import (
@@ -56,6 +55,15 @@ from .tokens import (
 )
 
 NULL = -1
+
+
+def fsm_step_bound(rom, n_items: int) -> int:
+    """Static step bound of one DES/SER engine run over ``n_items`` input
+    units (wire bytes or tokens): linear in the input plus a per-node
+    allowance for container bookkeeping.  Shared by both engines' runtime
+    guards and the ``repro.analysis`` schema pass, so the bound the
+    analyzer reports is the bound the engines enforce."""
+    return 8 * n_items + 64 * rom.n_nodes + 64
 
 
 @dataclass
@@ -181,7 +189,7 @@ class DesFSM:
 
         ptr = rom.root_first
         guard = 0
-        max_steps = 8 * len(wire) + 64 * rom.n_nodes + 64
+        max_steps = fsm_step_bound(rom, len(wire))
         while True:
             guard += 1
             if guard > max_steps:  # defensive: malformed wire must not hang
@@ -379,7 +387,7 @@ class SerFSM:
 
         ptr = rom.root_first
         guard = 0
-        max_steps = 8 * len(tokens) + 64 * rom.n_nodes + 64
+        max_steps = fsm_step_bound(rom, len(tokens))
         while True:
             guard += 1
             if guard > max_steps:

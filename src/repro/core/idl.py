@@ -238,7 +238,22 @@ class ClientSchema:
             if not isinstance(tag, int) or tag < 0:
                 raise SchemaError(f"tag for {path!r} must be a non-negative int")
             tags[path] = tag
-        return ClientSchema(tags)
+        cs = ClientSchema(tags)
+        cs.validate()
+        return cs
+
+    def validate(self) -> None:
+        """Tags must be unique: the DES emits (tag, value) pairs, so two
+        paths sharing a tag make its output ambiguous."""
+        by_tag: Dict[int, List[str]] = {}
+        for path, tag in self.tags.items():
+            by_tag.setdefault(tag, []).append(path)
+        for tag, paths in sorted(by_tag.items()):
+            if len(paths) > 1:
+                raise SchemaError(
+                    f"client-schema tag {tag} is shared by paths "
+                    f"{sorted(paths)}"
+                )
 
     def to_json(self) -> dict:
         return dict(self.tags)

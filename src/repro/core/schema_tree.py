@@ -48,6 +48,15 @@ KIND_NAMES = {KIND_BYTES: "Bytes", KIND_ARRAY: "Array", KIND_LIST: "List", KIND_
 #: number of elements"; we fix the count encoding at 4 little-endian bytes).
 COUNT_BYTES = 4
 
+#: entries one schema ROM may hold (paper §IV-A2: the ROM is a fixed BRAM;
+#: we fix the modeled budget so ``repro.analysis`` can prove a schema fits
+#: before any ROM is built)
+ROM_CAPACITY = 512
+
+#: context-stack slots of the DES/SER engines (max container nesting the
+#: hardware can suspend into; checked statically by ``repro.analysis``)
+STACK_CAPACITY = 16
+
 
 @dataclass
 class TreeNode:
@@ -160,6 +169,20 @@ class SchemaROM:
         widths = [COUNT_BYTES]
         widths += [int(b) for k, b in zip(self.kind, self.nbytes) if k == KIND_BYTES]
         return max(widths)
+
+    def static_bounds(self) -> dict:
+        """Static resource demands vs. the modeled hardware capacities —
+        the numbers the ``repro.analysis`` schema pass compares against
+        :data:`ROM_CAPACITY` / :data:`STACK_CAPACITY` / the u8 ListLevel
+        header lane."""
+        return {
+            "n_nodes": self.n_nodes,
+            "rom_capacity": ROM_CAPACITY,
+            "stack_depth": int(self.stack_depth),
+            "stack_capacity": STACK_CAPACITY,
+            "max_token_bytes": self.max_token_bytes,
+            "max_list_level": int(np.max(self.list_level, initial=0)),
+        }
 
     def describe(self) -> str:
         rows = ["idx kind   bytes child last emit_end lvl tag  path"]

@@ -20,7 +20,7 @@ Bytes(n) fields are unsigned ints (little-endian on the wire).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 

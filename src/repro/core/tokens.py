@@ -13,7 +13,7 @@ LIST_END carries the list nesting level instead of a value.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List
 
 # token kinds (shared by python + JAX FSM implementations)
 TOK_DATA = 0

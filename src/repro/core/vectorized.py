@@ -22,12 +22,11 @@ scatter.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from .idl import Array, Bytes, ListT, Schema, StructRef, TypeNode, ELEM

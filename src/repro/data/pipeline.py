@@ -13,7 +13,7 @@ tests on small batches).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 
@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from ..core.schema_tree import COUNT_BYTES
 from ..core.vectorized import DecodePlan
 from ..kernels.ops import decode_message_kernel, wire_to_u32
-from .schemas import TOKEN_BYTES, batch_schema
+from .schemas import TOKEN_BYTES
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Callable, Iterator, Optional
+from typing import Callable, Optional
 
 
 class Prefetcher:

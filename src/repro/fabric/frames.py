@@ -100,6 +100,23 @@ SEQ_MOD = 1 << 16
 ADAPTIVE_BIT = 1 << 31  # route-word flag: frame may take the -1 direction
 
 
+def route_word_budget() -> dict:
+    """Static lane widths of the frame header (the budgets the
+    ``repro.analysis`` fabric pass checks configs/demands against):
+    the u32 route word packs ``adaptive:u1|src:u7|dst:u8|seq:u16`` and
+    the ListLevel header word carries a u8 lane."""
+    return {
+        "adaptive_bits": 1,
+        "src_bits": 7,
+        "dst_bits": 8,
+        "seq_bits": 16,
+        "level_bits": 8,
+        "max_ranks": MAX_RANKS,
+        "seq_mod": SEQ_MOD,
+        "max_list_level": 255,
+    }
+
+
 def pack_route(src, dst, seq, adaptive: bool = False) -> jnp.ndarray:
     """(src, dst, seq) -> u32 route word ``adaptive:u1|src:u7|dst:u8|seq:u16``.
 

@@ -70,13 +70,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from ..analysis.rules import list_level_error, max_ranks_error
 from .frames import (
     HDR_CRC,
     HDR_LEVEL,
     HDR_ROUTE,
     HDR_SIZE,
     HDR_WORDS,
-    MAX_RANKS,
     PHIT_WORDS,
     SEQ_MOD,
     frame_capacity,
@@ -124,21 +124,29 @@ class Fabric:
         axis_names: Optional[Sequence[str]] = None,
         config: FabricConfig = FabricConfig(),
         n_ranks: Optional[int] = None,
+        analyze: bool = False,
     ):
         if mesh is None:
             n = n_ranks or len(jax.devices())
-            if n > MAX_RANKS:
+            err = max_ranks_error(n)
+            if err is not None:
                 # fail HERE with the route-word explanation rather than a
                 # confusing device-shortage error out of make_mesh (the
-                # Router re-checks for meshes passed in directly)
-                raise ValueError(
-                    f"n_ranks={n} exceeds MAX_RANKS={MAX_RANKS}: the route "
-                    f"word's src field is a u7 lane, so larger fabrics "
-                    f"would silently alias ranks mod {MAX_RANKS}"
-                )
+                # Router re-checks for meshes passed in directly, with the
+                # same shared-rule message)
+                raise ValueError(err)
             mesh = jax.make_mesh((n,), ("fabric",), devices=jax.devices()[:n])
         self.router = Router(mesh, axis_names, config)
         self.config = config
+        #: run the static analyzer on every tick's demand before dispatch
+        #: (and on the config+topology now), raising on ERROR findings
+        #: with the rule's fix hint instead of failing mid-scan
+        self.analyze = analyze
+        if analyze:
+            from ..analysis.fabric_passes import analyze_fabric
+            from ..analysis.findings import assert_clean
+
+            assert_clean(analyze_fabric(self), "Fabric(analyze=True)")
         R = self.router.n_ranks
         self._pending: List[Tuple[int, int, bytes, int]] = []  # (src, dst, wire, level)
         # seq counters are per (src, dst) stream so a receiver's expected
@@ -199,15 +207,13 @@ class Fabric:
                 "cannot be distinguished from a bare end-of-message "
                 "terminator — serialize an empty List instead"
             )
-        if not isinstance(list_level, (int, np.integer)) or not (
-            0 <= int(list_level) <= 255
-        ):
-            # the ListLevel header lane is u8-budgeted; an out-of-range
-            # level would wrap silently and alias another tenant's QoS
-            # class (the router keys credit classes on level % n_classes)
-            raise ValueError(
-                f"list_level must be an int in [0, 255], got {list_level!r}"
-            )
+        err = list_level_error(list_level)
+        if err is not None:
+            # shared analyzer rule fabric-list-level: the ListLevel header
+            # lane is u8-budgeted; an out-of-range level would wrap
+            # silently and alias another tenant's QoS class (the router
+            # keys credit classes on level % n_classes)
+            raise ValueError(err)
         self._pending.append((src, dst, bytes(wire), int(list_level)))
 
     # -- the fabric tick ---------------------------------------------------
@@ -235,6 +241,18 @@ class Fabric:
             self._complete()
         if not self._pending:
             return False
+        if self.analyze:
+            # static pre-flight of this tick's demand: rank ranges, seq
+            # windows, rx capacity — raise with the rule's fix hint BEFORE
+            # dispatch (the pending sends stay queued, so the caller can
+            # drop the offender and retry)
+            from ..analysis.fabric_passes import analyze_sends
+            from ..analysis.findings import assert_clean
+
+            _, fs = analyze_sends(
+                self.router.sizes, self.config, self._pending,
+            )
+            assert_clean(fs, "Fabric.exchange(analyze=True)")
         sends, self._pending = self._pending, []
         phits = self.config.frame_phits
         frame_words = phits * PHIT_WORDS

@@ -93,7 +93,6 @@ live in ``mailbox.py``.
 from __future__ import annotations
 
 import math
-from collections import Counter
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
@@ -106,15 +105,21 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .frames import (
     HDR_LEVEL,
     HDR_WORDS,
-    MAX_RANKS,
     PHIT_WORDS,
     route_adaptive,
     route_dst,
     verify_frames,
 )
 
-#: direction masks for plan_steps / the per-axis scan builder
-DIR_FWD, DIR_BWD = 1, 2
+#: shared validation rules — the static analyzer and the runtime raise the
+#: SAME messages (repro.analysis.rules is fabric-free at import time)
+from ..analysis.findings import Severity
+from ..analysis.rules import fabric_config_findings, max_ranks_error
+
+#: direction masks for plan_steps / the per-axis scan builder, shared with
+#: the analyzer's communication pass (defined there before any import, so
+#: this line is cycle-safe whichever package loads first)
+from ..analysis.comm import DIR_BWD, DIR_FWD
 
 
 @dataclass(frozen=True)
@@ -147,39 +152,16 @@ class FabricConfig:
     early_exit: bool = True
 
     def __post_init__(self) -> None:
-        if self.frame_phits < 1 or self.credits < 1:
-            raise ValueError(
-                f"frame_phits/credits must be >= 1, got "
-                f"{self.frame_phits}/{self.credits}"
-            )
-        if self.routing not in ("shortest", "dimension"):
-            raise ValueError(
-                f"routing must be 'shortest' or 'dimension', got "
-                f"{self.routing!r}"
-            )
-        if self.defect_after < 0:
-            raise ValueError(
-                f"defect_after must be >= 0, got {self.defect_after}"
-            )
-        if self.defect_after > 0 and self.routing != "shortest":
-            raise ValueError(
-                "defect_after needs routing='shortest': only frames whose "
-                "route word carries the adaptive bit may defect, and "
-                "dimension-order frames never do"
-            )
-        if self.qos_weights is not None:
-            if len(self.qos_weights) < 1 or any(
-                w < 1 for w in self.qos_weights
-            ):
-                raise ValueError(
-                    f"qos_weights must be positive, got {self.qos_weights}"
-                )
-            if self.credits < len(self.qos_weights):
-                raise ValueError(
-                    f"need credits >= qos classes so every class holds at "
-                    f"least one credit, got credits={self.credits} for "
-                    f"{len(self.qos_weights)} classes"
-                )
+        # the analyzer's fabric pass is the single source of these checks
+        # (repro.analysis.rules): construction raises the first ERROR
+        # finding's message verbatim, so the error a user hits here and
+        # the finding `python -m repro.analysis` reports are identical.
+        for f in fabric_config_findings(
+            self.frame_phits, self.credits, self.routing,
+            self.defect_after, self.qos_weights,
+        ):
+            if f.severity is Severity.ERROR:
+                raise ValueError(f.message)
 
     @property
     def frame_width(self) -> int:
@@ -256,14 +238,9 @@ class Router:
         self.axis_names = tuple(axis_names or mesh.axis_names)
         self.sizes = tuple(mesh.shape[a] for a in self.axis_names)
         self.n_ranks = math.prod(self.sizes)
-        if self.n_ranks > MAX_RANKS:
-            raise ValueError(
-                f"fabric of {self.n_ranks} ranks exceeds MAX_RANKS="
-                f"{MAX_RANKS}: the route word's src field is a u7 lane "
-                f"(frames.py packs adaptive:u1|src:u7|dst:u8|seq:u16), so "
-                f"ranks >= {MAX_RANKS} would silently alias rank "
-                f"(r % {MAX_RANKS}) and misdeliver frames"
-            )
+        err = max_ranks_error(self.n_ranks)
+        if err is not None:  # same rule (and words) as Fabric.__init__
+            raise ValueError(err)
         self.config = config
         self._jitted = {}
         self._fused = {}
@@ -363,64 +340,20 @@ class Router:
         starve (``load <= credits``) keep the tight per-direction bound.
         The early-exit scan makes the slack free when nothing defects.
         """
-        credits = self.config.credits
-        adaptive = self.config.adaptive
+        # the load matrix + bounds live in the analyzer's communication
+        # pass (lazy import: those functions are defined after the module
+        # cycle re-entry point), so the matrix `python -m repro.analysis`
+        # reports and the bounds this router jits from cannot disagree.
+        from ..analysis.comm import bounds_from_loads, demand_link_loads
+
         defect = self.config.defect_after if self.config.defection else 0
-        defaults = self.default_steps(sum(counts))
-        out = []
-        for ai, n in enumerate(self.sizes):
-            if n == 1:
-                out.append((0, 0))
-                continue
-            stride = self._stride(ai)
-            group = Counter()
-            max_hops = {}
-            for s, d, cnt in zip(srcs, dsts, counts):
-                sc = (s // stride) % n
-                dc = (d // stride) % n
-                fwd = (dc - sc) % n
-                if fwd == 0 or cnt == 0:
-                    continue
-                # ring id: axes < ai at dst coords, axes > ai at src coords
-                ring = (d // (stride * n), s % stride)
-                if adaptive and fwd > n // 2:
-                    key, hops_ = (ring, DIR_BWD), n - fwd
-                else:
-                    key, hops_ = (ring, DIR_FWD), fwd
-                group[key] += cnt
-                max_hops[key] = max(max_hops.get(key, 0), hops_)
-            if not group:
-                out.append((0, 0))
-                continue
-            bounds = []
-            dirs = 0
-            if defect:
-                ring_load = Counter()
-                for (ring, _), load in group.items():
-                    ring_load[ring] += load
-                for ring, load in ring_load.items():
-                    if load > credits:  # starvation (so defection) possible
-                        bounds.append(-(-load // credits) + (n - 1) + defect + 1)
-                        dirs |= DIR_FWD | DIR_BWD
-                    else:
-                        for dmask in (DIR_FWD, DIR_BWD):
-                            k = (ring, dmask)
-                            if k in group:
-                                bounds.append(
-                                    -(-group[k] // credits) + max_hops[k] + 1
-                                )
-                                dirs |= dmask
-            else:
-                bounds = [
-                    -(-load // credits) + max_hops[k] + 1
-                    for k, load in group.items()
-                ]
-                for (_, dmask) in group:
-                    dirs |= dmask
-            steps = max(bounds)
-            steps = min(steps + (steps % 2), defaults[ai][0])  # even bucket
-            out.append((steps, dirs))
-        return tuple(out)
+        loads = demand_link_loads(
+            self.sizes, srcs, dsts, counts, self.config.adaptive
+        )
+        return bounds_from_loads(
+            loads, self.sizes, self.config.credits, defect,
+            self.default_steps(sum(counts)),
+        )
 
     # -- delivery ----------------------------------------------------------
 

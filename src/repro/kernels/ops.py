@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.idl import Schema
 from ..core.vectorized import BatchedDecodePlan, DecodePlan, stack_wires
 from ..fabric.frames import frame_parts_batch
 from .frame_pack import (

@@ -39,7 +39,6 @@ from ..runtime.actshard import mesh_constrainer, use_constrainer
 from .hloanalysis import HBM_BW, ICI_BW, PEAK_FLOPS, analyze
 from .mesh import make_production_mesh
 from .steps import (
-    batch_specs,
     cache_specs,
     input_specs,
     make_prefill_step,

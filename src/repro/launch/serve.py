@@ -60,7 +60,7 @@ from ..core import (
     tokens_to_msg,
 )
 from ..data.schemas import request_schema, response_schema
-from ..models import init_cache, init_params
+from ..models import init_params
 from ..runtime.scheduler import ContinuousBatcher, SchedulerConfig
 from .steps import make_prefill_step, make_serve_step
 
@@ -260,9 +260,32 @@ def place_requests(
     return placement
 
 
+def _analyze_serve(fabric, n_requests: int, context: str) -> None:
+    """The ``analyze=True`` serve hook: statically prove the serving
+    schemas, the fabric config + topology, and the stream-id budget safe
+    before any request crosses a link — raising on ERROR findings with the
+    rule's fix hint.  Also arms the fabric's per-tick demand analysis."""
+    from ..analysis import analyze_schema, assert_clean, finding
+    from ..analysis.fabric_passes import analyze_fabric
+    from ..data.schemas import request_schema, response_schema
+    from ..stream.chunks import STREAM_ID_BITS
+
+    fs = analyze_schema(request_schema(), location=f"{context}.request")
+    fs += analyze_schema(response_schema(), location=f"{context}.response")
+    fs += analyze_fabric(fabric, location=f"{context}.fabric")
+    if n_requests >= (1 << STREAM_ID_BITS):
+        fs.append(finding(
+            "stream-id-width", context,
+            f"{n_requests} requests overflow the u{STREAM_ID_BITS} "
+            f"request lane of the (request | prompt) stream-id packing",
+        ))
+    assert_clean(fs, context)
+    fabric.analyze = True  # per-tick demand checks from here on
+
+
 def default_serve_fabric(
     n_shards: Optional[int] = None, routing: str = "shortest",
-    defect_after: int = 0,
+    defect_after: int = 0, analyze: bool = False,
 ):
     """The fabric ``serve_requests_sharded`` builds when none is passed:
     rank 0 ingress plus up to 7 serving shards on the available devices,
@@ -288,6 +311,7 @@ def default_serve_fabric(
         n_ranks=n_ranks,
         config=FabricConfig(frame_phits=16, routing=routing,
                             defect_after=defect_after),
+        analyze=analyze,
     )
 
 
@@ -304,6 +328,7 @@ def serve_requests_sharded(
     placement: Optional[List[int]] = None,
     routing: str = "shortest",
     defect_after: int = 0,
+    analyze: bool = False,
 ) -> List[bytes]:
     """Answer N request wires across fabric-connected serving shards.
 
@@ -332,6 +357,8 @@ def serve_requests_sharded(
             params, cfg, wires, max_new=max_new, pad_to=pad_to,
             slots=slots, admit_cap=admit_cap,
         )
+    if analyze:
+        _analyze_serve(fabric, len(wires), "serve_requests_sharded")
     shards = list(range(1, fabric.n_ranks))
     ingress = fabric.mailbox(0)
     if placement is None:
@@ -402,6 +429,7 @@ def serve_requests_streaming(
     backpressure_p95: Optional[float] = None,
     backpressure_chunks: int = 1,
     backpressure_hold: int = 3,
+    analyze: bool = False,
 ) -> List[bytes]:
     """Answer N request wires with token-level streamed responses.
 
@@ -463,6 +491,8 @@ def serve_requests_streaming(
             params, cfg, wires, max_new=max_new, pad_to=pad_to,
             slots=slots, admit_cap=admit_cap,
         )
+    if analyze:
+        _analyze_serve(fabric, len(wires), "serve_requests_streaming")
     shards = list(range(1, fabric.n_ranks))
     ingress = fabric.mailbox(0)
     reqs = decode_request_batch(wires)  # ingress keeps rids + prompt counts

@@ -6,7 +6,6 @@ cleanly; samplers stay greedy (argmax) to keep serving deterministic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -14,7 +13,6 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, ShapeConfig
 from ..models import decode_step, init_cache, init_params, loss_fn, prefill
-from ..models.common import dtype_of
 from ..optim import AdamWConfig, OptState, adamw_init, adamw_update, microbatched_grads
 
 PyTree = Any

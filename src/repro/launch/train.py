@@ -19,12 +19,9 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import sys
-import time
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..configs import get_config, smoke_config

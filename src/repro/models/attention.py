@@ -13,12 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from .common import (
-    apply_norm,
     apply_rope,
     decode_attention,
     dense_init,
     flash_attention,
-    init_norm,
 )
 from ..configs.base import ModelConfig
 

@@ -6,14 +6,12 @@ the full (S, T) score matrix.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 PyTree = object
 

@@ -16,13 +16,12 @@ scans over stacked parameters (small HLO for the multi-pod dry-run);
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.base import ModelConfig
 from ..runtime.actshard import constrain as act_constrain
 from . import attention as attn_mod
 from . import ffn as ffn_mod

@@ -16,7 +16,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .common import dense_init, init_norm, rmsnorm
+from .common import dense_init, rmsnorm
 from ..configs.base import ModelConfig
 
 CHUNK = 256

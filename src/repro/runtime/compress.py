@@ -11,7 +11,7 @@ EXPERIMENTS.md §Perf uses this in the collective-bound cells.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

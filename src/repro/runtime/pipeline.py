@@ -13,8 +13,7 @@ the dry-run via ``--pipeline``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, List
 
 import jax
 import jax.numpy as jnp

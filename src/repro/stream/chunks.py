@@ -49,6 +49,16 @@ FLAG_EOS = 1
 #: sanity bound used by the back-to-front parser (a corrupt count word must
 #: not send the cursor to a plausible-looking but wrong chunk boundary)
 MAX_CHUNK_TOKENS = 1 << 16
+#: stream ids pack (local_request:u16 | prompt_index:u16) — the analyzer's
+#: stream-id-width rule checks serve calls against this budget
+STREAM_ID_BITS = 16
+
+
+def check_chunk_tokens(n: int) -> None:
+    """Single source of the chunk token-count bound (analyzer rule
+    stream-chunk-tokens), shared by both encode paths."""
+    if n >= MAX_CHUNK_TOKENS:
+        raise ValueError(f"chunk of {n} tokens exceeds {MAX_CHUNK_TOKENS}")
 
 
 @dataclass(frozen=True)
@@ -66,8 +76,7 @@ def encode_token_chunk(
 ) -> bytes:
     """Serialize ONE chunk (reference path; bursts use the Pallas kernel)."""
     n = len(tokens)
-    if n >= MAX_CHUNK_TOKENS:
-        raise ValueError(f"chunk of {n} tokens exceeds {MAX_CHUNK_TOKENS}")
+    check_chunk_tokens(n)
     words = np.empty(CHUNK_META_WORDS + n + 1, np.uint32)
     words[0] = stream_id
     words[1] = step
@@ -99,10 +108,7 @@ def encode_chunk_burst(chunks: Sequence[TokenChunk]) -> bytes:
     toks = np.zeros((Bp, cap), np.uint32)
     counts = np.zeros((Bp,), np.int32)
     for i, c in enumerate(chunks):
-        if len(c.tokens) >= MAX_CHUNK_TOKENS:
-            raise ValueError(
-                f"chunk of {len(c.tokens)} tokens exceeds {MAX_CHUNK_TOKENS}"
-            )
+        check_chunk_tokens(len(c.tokens))
         meta[i] = (c.stream_id, c.step, FLAG_EOS if c.eos else 0)
         toks[i, : len(c.tokens)] = c.tokens
         counts[i] = len(c.tokens)

@@ -7,7 +7,6 @@ Invariants (paper §III, §IV):
    frame size >= 1 phit.
  * tokens_to_msg inverts msg_to_des_tokens.
 """
-import json
 
 import numpy as np
 import pytest

@@ -2,7 +2,7 @@
 import pytest
 
 from repro.core import Schema, SchemaError, ClientSchema, all_token_paths
-from repro.core.idl import Array, Bytes, ListT, StructRef, parse_type
+from repro.core.idl import Array, ListT, StructRef, parse_type
 
 
 PAPER_SCHEMA = {

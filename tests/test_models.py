@@ -8,8 +8,7 @@ import pytest
 
 from repro.configs import all_archs, get_config, smoke_config
 from repro.models import (
-    decode_step, forward, init_cache, init_params, loss_fn, param_count,
-    plan_period, prefill,
+    decode_step, forward, init_params, loss_fn,     plan_period, prefill,
 )
 
 KEY = jax.random.PRNGKey(0)

@@ -7,12 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.experimental.shard_map import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import all_archs, get_config, smoke_config
 from repro.models import init_cache, init_params
 from repro.runtime import (
-    ShardRules, batch_pspec, batch_shardings, cache_shardings,
+    ShardRules, batch_pspec, cache_shardings,
     cross_pod_mean_int8, frame_stream, make_framed_sender, param_shardings,
     unframe_stream,
 )

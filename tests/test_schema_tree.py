@@ -1,5 +1,4 @@
 """Schema tree / ROM compilation (paper §IV-A2)."""
-import numpy as np
 
 from repro.core import (
     ClientSchema, Schema, build_rom, build_tree, tree_depth,
