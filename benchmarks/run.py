@@ -16,6 +16,17 @@ throughput) regressed more than the threshold (default 20%) vs the number
 checked in, the run exits non-zero so CI fails loudly instead of letting
 a slow fabric ship silently.  Override with ``BENCH_GATE_MIN_RATIO``
 (e.g. ``0.5`` on noisy shared runners) or disable with ``BENCH_GATE=0``.
+
+Every BENCH_*.json carries a ``meta`` block (schema version, jax/device
+platform, git sha, timestamp — ``repro.obs.report.environment_meta``) so a
+committed baseline is attributable to the hardware that produced it.  The
+gate reads metrics strictly by name and ignores keys it does not know, so
+old gates keep working against newer artifacts and vice versa.
+
+``--metrics-json``/``--trace-out`` export the observability artifacts:
+a metrics snapshot of the bench run and a Chrome-trace JSON with one span
+per bench module (load either into ``python -m repro.obs`` or
+chrome://tracing).
 """
 from __future__ import annotations
 
@@ -27,6 +38,8 @@ import time
 from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT / "src") not in sys.path:  # `python -m benchmarks.run`
+    sys.path.insert(0, str(REPO_ROOT / "src"))  # without PYTHONPATH=src
 
 
 def _tables_json(tables) -> list:
@@ -36,10 +49,20 @@ def _tables_json(tables) -> list:
     ]
 
 
-def _run_mod(name: str, mod) -> list:
+def _run_mod(name: str, mod, metrics=None, trace=None) -> list:
     t0 = time.time()
+    span_t0 = trace.now_us() if trace is not None else 0.0
     tables = mod.run()
-    print(f"[{name}] {time.time()-t0:.1f}s", file=sys.stderr)
+    dt = time.time() - t0
+    print(f"[{name}] {dt:.1f}s", file=sys.stderr)
+    if trace is not None:
+        trace.complete(name, span_t0, dt * 1e6, cat="bench",
+                       args={"tables": len(tables)})
+    if metrics is not None:
+        metrics.series("bench.module.seconds", module=name).append(dt)
+        for k, v in getattr(mod, "LAST_METRICS", {}).items():
+            if isinstance(v, (int, float)):
+                metrics.gauge("bench.metric", module=name, metric=k).set(v)
     for tb in tables:
         print(tb.show())
         print()
@@ -103,26 +126,53 @@ def main() -> None:
                     help="fabric + stream benches only; write "
                          "BENCH_fabric.json / BENCH_stream.json at the "
                          "repo root (CI perf tracking)")
+    ap.add_argument("--metrics-json", metavar="PATH",
+                    help="write a repro.obs metrics snapshot of the bench "
+                         "run (module wall-times + LAST_METRICS gauges)")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="write a Chrome-trace JSON with one span per "
+                         "bench module (chrome://tracing / Perfetto)")
     args = ap.parse_args()
+
+    from repro.obs import MetricsRegistry, TraceRecorder, environment_meta
+
+    metrics = MetricsRegistry() if args.metrics_json else None
+    trace = TraceRecorder() if args.trace_out else None
+
+    def _export() -> None:
+        if metrics is not None:
+            snap = metrics.snapshot()
+            snap["meta"] = environment_meta()
+            with open(args.metrics_json, "w") as f:
+                json.dump(snap, f, indent=1)
+            print(f"wrote {args.metrics_json}", file=sys.stderr)
+        if trace is not None:
+            trace.save(args.trace_out)
+            print(f"wrote {args.trace_out}", file=sys.stderr)
 
     from . import bench_fabric, bench_stream
 
     if args.smoke:
-        # read the COMMITTED fabric baseline before this run overwrites it
+        # read the COMMITTED fabric baseline before this run overwrites it.
+        # Strictly by-name with unknown keys ignored: a baseline written by
+        # a newer (or older) schema still gates on the metrics both know.
         baseline = None
         fabric_json = REPO_ROOT / "BENCH_fabric.json"
         if fabric_json.exists():
             try:
-                baseline = json.loads(fabric_json.read_text())["metrics"]
-            except (ValueError, KeyError):
+                loaded = json.loads(fabric_json.read_text())
+                baseline = loaded.get("metrics") if isinstance(loaded, dict) \
+                    else None
+            except ValueError:
                 baseline = None
         all_tables = []
         for name, mod in (("fabric", bench_fabric), ("stream", bench_stream)):
-            tables = _run_mod(f"bench_{name}", mod)
+            tables = _run_mod(f"bench_{name}", mod, metrics, trace)
             all_tables.extend(tables)
             out = REPO_ROOT / f"BENCH_{name}.json"
             out.write_text(json.dumps({
                 "bench": name,
+                "meta": environment_meta(),
                 "metrics": getattr(mod, "LAST_METRICS", {}),
                 "tables": _tables_json(tables),
             }, indent=2) + "\n")
@@ -134,6 +184,7 @@ def main() -> None:
                 f.write(tb.csv())
                 f.write("\n")
         print(f"wrote {csv_path} ({len(all_tables)} tables)")
+        _export()
         _perf_gate(baseline, bench_fabric.LAST_METRICS)
         return
 
@@ -151,13 +202,14 @@ def main() -> None:
     ]
     tables = []
     for name, mod in mods:
-        tables.extend(_run_mod(name, mod))
+        tables.extend(_run_mod(name, mod, metrics, trace))
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/benchmarks.csv", "w") as f:
         for tb in tables:
             f.write(tb.csv())
             f.write("\n")
     print(f"wrote experiments/benchmarks.csv ({len(tables)} tables)")
+    _export()
 
 
 if __name__ == "__main__":

@@ -60,6 +60,14 @@ def main():
                     help="also stream token chunks back from the shards "
                          "every decode tick and report time-to-first-token")
     ap.add_argument("--n-shards", type=int, default=None)
+    ap.add_argument("--metrics-json", metavar="PATH",
+                    help="with --streaming: write the serve metrics "
+                         "snapshot (TTFT, tokens/s, fabric counters) as "
+                         "JSON; inspect with `python -m repro.obs PATH`")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="with --streaming: write a Chrome-trace JSON of "
+                         "the streamed run (serve ticks, chunk arrivals) "
+                         "for chrome://tracing / Perfetto")
     args = ap.parse_args()
     cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=4)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -123,15 +131,39 @@ def main():
             print("[streaming]  skipped: needs >= 2 devices (set "
                   "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
         else:
+            metrics = trace = None
+            if args.metrics_json or args.trace_out:
+                from repro.obs import MetricsRegistry, TraceRecorder
+
+                if args.metrics_json:
+                    metrics = MetricsRegistry()
+                if args.trace_out:
+                    trace = TraceRecorder()
             arrivals = []
             t0 = time.time()
             stream_wires = serve_requests_streaming(
                 params, cfg, wires, max_new=MAX_NEW, pad_to=PAD_TO, slots=8,
                 fabric=fabric, overlap=True,
+                metrics=metrics, trace=trace,
                 on_token=lambda m, j, step, tok:
                     arrivals.append(time.time() - t0),
             )
             dt_stream = time.time() - t0
+            if metrics is not None:
+                import json
+
+                from repro.obs import environment_meta
+
+                snap = metrics.snapshot()
+                snap["meta"] = environment_meta()
+                with open(args.metrics_json, "w") as f:
+                    json.dump(snap, f, indent=1)
+                print(f"[streaming]  wrote {args.metrics_json} "
+                      f"({len(snap['metrics'])} metrics)")
+            if trace is not None:
+                trace.save(args.trace_out)
+                print(f"[streaming]  wrote {args.trace_out} "
+                      f"({len(trace.events)} events)")
             assert stream_wires == resp_wires, \
                 "streaming plane diverged from the batched plane"
             print(f"[streaming]  same burst streamed per decode tick "

@@ -71,6 +71,16 @@ import numpy as np
 from jax.sharding import Mesh
 
 from ..analysis.rules import list_level_error, max_ranks_error
+from ..obs.counters import (
+    CTR_FIELDS,
+    DIR_SLOTS,
+    ctr_index,
+    global_index,
+    load_drift as _load_drift,
+    n_counters,
+    observed_link_loads as _observed_link_loads,
+)
+from ..obs.metrics import ClassWindows, MetricsRegistry
 from .frames import (
     HDR_CRC,
     HDR_LEVEL,
@@ -125,6 +135,8 @@ class Fabric:
         config: FabricConfig = FabricConfig(),
         n_ranks: Optional[int] = None,
         analyze: bool = False,
+        metrics: Optional[MetricsRegistry] = None,
+        trace=None,
     ):
         if mesh is None:
             n = n_ranks or len(jax.devices())
@@ -159,10 +171,29 @@ class Fabric:
         #: per-(rank, QoS class) trace of recent Delivery.arrive_steps —
         #: the congestion observable the stream plane's backpressure-fed
         #: lane scheduler consumes (class = list_level % n_classes, the
-        #: same key the router's WRR credit scheduler uses)
-        self._arrive: List[Dict[int, deque]] = [{} for _ in range(R)]
+        #: same key the router's WRR credit scheduler uses).  ONE shared
+        #: windowing implementation (obs.metrics) with the StreamReader.
+        self._arrive: List[ClassWindows] = [
+            ClassWindows(maxlen=256) for _ in range(R)
+        ]
+        #: host-side telemetry: always-on metrics registry (pass one in to
+        #: share it with the serve loop) and an optional obs.trace
+        #: TraceRecorder for the timeline export
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.trace = trace
+        #: on-device counter folds (obs.counters layout): all-time per-rank
+        #: totals plus a window of per-tick deltas, and the accumulated
+        #: STATIC demand matrix of every dispatched tick — the expected
+        #: side of the static-vs-observed load drift check
+        NC = n_counters(len(self.router.axis_names))
+        self._ctr_total = np.zeros((R, NC), np.int64)
+        self._ctr_window: deque = deque(maxlen=256)
+        self._expected_loads: List[Dict[Tuple, int]] = [
+            {} for _ in self.router.sizes
+        ]
         #: the dispatched-but-not-reassembled tick (device arrays + counts)
         self._inflight: Optional[Tuple] = None
+        self._inflight_meta: Optional[dict] = None
         #: tick-shape buckets seen so far — a tick landing in a new bucket
         #: implies an XLA compile, which steady-state serving must not do
         #: silently (logged once per bucket).
@@ -270,6 +301,15 @@ class Fabric:
             routes[i] = (src, dst, self._tx_seq[src][dst])
             self._tx_seq[src][dst] = (self._tx_seq[src][dst] + n_live[i]) % SEQ_MOD
 
+        # accumulate the tick's STATIC demand matrix (what the analyzer
+        # predicts this traffic should put on every (link, direction)) so
+        # `load_drift()` can hold it against the on-device observed side
+        self._note_expected(sends, n_live)
+        self._inflight_meta = {
+            "frames": sum(n_live),
+            "sends": len(sends),
+            "t0": self.trace.now_us() if self.trace is not None else 0.0,
+        }
         if self.config.fused and self.tx_hook is None:
             self._dispatch_fused(sends, n_live, payloads, nbytes, routes,
                                  F_arr)
@@ -376,12 +416,19 @@ class Fabric:
         self._inflight = ("frames",) + out
 
     def _note_bucket(self, key: Tuple) -> None:
-        """Record the tick's jit-shape bucket; log ONCE when it is new (a
-        new bucket means an XLA compile — steady-state serving should
-        never see this line after warmup)."""
+        """Record the tick's jit-shape bucket; when it is new (a new bucket
+        means an XLA compile, which steady-state serving must not do
+        silently) log once AND bump the machine-readable
+        ``fabric.tick.recompiles{bucket=...}`` counter, so a serve run or
+        CI can assert the count is flat after warmup."""
         if key not in self._tick_buckets:
             self._tick_buckets.add(key)
             logger.info("fabric tick compiled for new shape bucket %s", key)
+            label = "/".join(str(p) for p in key)
+            self.metrics.counter("fabric.tick.recompiles", bucket=label).add(1)
+            if self.trace is not None:
+                self.trace.instant("fabric.recompile", cat="fabric",
+                                   args={"bucket": label})
 
     def poll(self) -> bool:
         """Complete the in-flight async tick, reassembling its messages into
@@ -397,11 +444,15 @@ class Fabric:
         point where delivered frames are materialized as host bytes."""
         kind, *out = self._inflight
         self._inflight = None
+        meta, self._inflight_meta = self._inflight_meta or {}, None
         if kind == "fused":  # RX split already happened inside the tick jit
-            rx_hdr, rx_pay, rx_cnt, ok, crc_ok, rx_step = out
+            rx_hdr, rx_pay, rx_cnt, ok, crc_ok, rx_step, ctr = out
         else:
-            rx, rx_cnt, ok, crc_ok, rx_step = out
+            rx, rx_cnt, ok, crc_ok, rx_step, ctr = out
         self.last_crc_ok = bool(np.all(np.asarray(crc_ok)))
+        # counter readback rides the SAME host sync this reassembly already
+        # pays — the dispatch path stays sync-free with counters on
+        self._fold_counters(np.asarray(ctr), kind, meta)
         if not bool(np.all(np.asarray(ok))):
             raise RuntimeError(
                 "fabric routing failed (undeliverable frame or buffer "
@@ -519,6 +570,100 @@ class Fabric:
         out, self._inbox[rank] = self._inbox[rank], []
         return out
 
+    # -- telemetry folds (the host half of the obs plane) ------------------
+
+    def _note_expected(self, sends, n_live) -> None:
+        """Fold this tick's STATIC per-(link, direction) demand —
+        ``analysis.comm.demand_link_loads`` of exactly the sends being
+        dispatched — into the accumulated expected-load matrix."""
+        from ..analysis.comm import demand_link_loads
+
+        loads = demand_link_loads(
+            self.router.sizes,
+            [s for s, _, _, _ in sends],
+            [d for _, d, _, _ in sends],
+            n_live,
+            self.config.adaptive,
+        )
+        for ai, group in enumerate(loads):
+            acc = self._expected_loads[ai]
+            for key, ll in group.items():
+                acc[key] = acc.get(key, 0) + ll.frames
+
+    def _fold_counters(self, ctr: np.ndarray, kind: str, meta: dict) -> None:
+        """Fold one tick's per-rank on-device counter block into the
+        all-time totals, the per-tick delta window, and the metrics
+        registry (plus the trace timeline when one is attached)."""
+        delta = ctr.astype(np.int64)
+        self._ctr_total += delta
+        self._ctr_window.append(delta)
+        axes = self.router.axis_names
+        tot = delta.sum(axis=0)
+        m = self.metrics
+        m.counter("fabric.ticks", engine=kind).add(1)
+        m.counter("fabric.frames.delivered").add(
+            int(tot[global_index(len(axes), "delivered")])
+        )
+        m.counter("fabric.crc.failures").add(
+            int(tot[global_index(len(axes), "crc_fail")])
+        )
+        for ai, axis in enumerate(axes):
+            for di, dname in enumerate(DIR_SLOTS):
+                for fname in CTR_FIELDS:
+                    v = int(tot[ctr_index(ai, di, fname)])
+                    if v:
+                        m.counter(f"fabric.link.{fname}",
+                                  axis=axis, dir=dname).add(v)
+        if self.trace is not None:
+            t0 = meta.get("t0", 0.0)
+            self.trace.complete(
+                "fabric.tick", t0, self.trace.now_us() - t0, cat="fabric",
+                args={
+                    "engine": kind,
+                    "frames": meta.get("frames", 0),
+                    "sends": meta.get("sends", 0),
+                    "delivered": int(
+                        tot[global_index(len(axes), "delivered")]
+                    ),
+                },
+            )
+
+    def counters_total(self) -> np.ndarray:
+        """All-time per-rank on-device counter block, ``(ranks,
+        n_counters)`` int64 in the ``repro.obs.counters`` layout."""
+        return self._ctr_total.copy()
+
+    def observed_link_loads(self, window: Optional[int] = None):
+        """The OBSERVED per-(link, direction) load matrix, folded from the
+        on-device ``entered`` counters and keyed exactly like the static
+        ``analysis.comm.demand_link_loads`` matrix.  ``window`` restricts
+        the fold to the most recent N ticks (the live view ROADMAP item 4's
+        self-tuning consumes); default is all-time."""
+        if window is not None:
+            ticks = list(self._ctr_window)[-window:]
+            delta = (
+                np.sum(ticks, axis=0) if ticks
+                else np.zeros_like(self._ctr_total)
+            )
+        else:
+            delta = self._ctr_total
+        return _observed_link_loads(self.router.sizes, delta)
+
+    def expected_link_loads(self):
+        """Accumulated static demand matrix of every dispatched tick (the
+        expected side of the drift check), per-axis ``{(ring, dir):
+        frames}``."""
+        return tuple(dict(g) for g in self._expected_loads)
+
+    def load_drift(self) -> Dict[Tuple, Tuple[int, int]]:
+        """Static-vs-observed load divergence: empty dict when every frame
+        rode exactly the link the analyzer predicted; a dropped, misrouted
+        or defected frame shows up as ``{(axis, ring, dir): (expected,
+        observed)}``.  Deterministic workloads without defection must see
+        ``{}`` — property-tested."""
+        return _load_drift(self.expected_link_loads(),
+                           self.observed_link_loads())
+
     # -- congestion observability -----------------------------------------
 
     @property
@@ -527,10 +672,9 @@ class Fabric:
         return len(self.config.qos_weights) if self.config.qos_weights else 1
 
     def _record_arrive(self, rank: int, level: int, step: int) -> None:
-        trace = self._arrive[rank].setdefault(
-            level % self.n_classes, deque(maxlen=256)
-        )
-        trace.append(step)
+        cls = level % self.n_classes
+        self._arrive[rank].record(cls, step)
+        self.metrics.histogram("fabric.arrive.step", cls=cls).observe(step)
 
     def class_arrive_stats(self, rank: int) -> Dict[int, Dict[str, float]]:
         """Per-QoS-class arrive-step percentiles of the messages recently
@@ -538,15 +682,10 @@ class Fabric:
         {n, mean, p95, max, jitter}}`` — the congestion signal a
         backpressure-fed sender (``stream.plane.ChunkLane``) clamps on.
         Classes key as ``list_level % n_classes``, matching the router's
-        WRR credit scheduler."""
-        # deferred: the percentile math is shared with StreamReader so the
-        # two ends of the feedback loop can never disagree on "p95"
-        from ..stream.plane import arrive_stats
-
-        return {
-            cls: arrive_stats(trace)
-            for cls, trace in sorted(self._arrive[rank].items())
-        }
+        WRR credit scheduler.  The window math is ``obs.metrics``'s shared
+        implementation — byte-identical to ``StreamReader``'s, so the two
+        ends of the feedback loop can never disagree on "p95"."""
+        return self._arrive[rank].stats()
 
 
 class Mailbox:

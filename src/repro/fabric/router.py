@@ -108,8 +108,14 @@ from .frames import (
     PHIT_WORDS,
     route_adaptive,
     route_dst,
+    route_src,
     verify_frames,
 )
+
+#: on-device counter-block layout (import-pure, so no cycle): the scan
+#: carry accumulates one int32 vector per device and returns it alongside
+#: the delivered frames — the fused no-host-sync path stays sync-free.
+from ..obs.counters import ctr_index, global_index, n_counters
 
 #: shared validation rules — the static analyzer and the runtime raise the
 #: SAME messages (repro.analysis.rules is fabric-free at import time)
@@ -362,20 +368,22 @@ class Router:
         tx: jnp.ndarray,
         tx_valid: jnp.ndarray,
         total_frames: Optional[int] = None,
-    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    ) -> Tuple[jnp.ndarray, ...]:
         """Route every valid tx frame to its destination rank.
 
         ``tx`` is ``(ranks, T, width)`` u32 (width = HDR + payload words),
         ``tx_valid`` ``(ranks, T)`` bool.  ``total_frames`` is an optional
         upper bound on valid frames across all ranks (default ``R*T``): the
         scan length derives from it, so a tight bound means fewer hop steps.
-        Returns ``(rx, rx_count, ok, crc_ok, rx_step)``: delivered frames
-        per rank in arrival order, the per-rank count, a routing flag (False
-        on undeliverable frames or buffer overflow — both indicate a
-        misconfigured fabric), a CRC flag (False when a delivered frame
-        fails its checksum), and the scan step each frame arrived at
-        (in-tick queueing latency: self-sends arrive at step 0, each
-        ppermute hop or credit stall adds one).
+        Returns ``(rx, rx_count, ok, crc_ok, rx_step, counters)``:
+        delivered frames per rank in arrival order, the per-rank count, a
+        routing flag (False on undeliverable frames or buffer overflow —
+        both indicate a misconfigured fabric), a CRC flag (False when a
+        delivered frame fails its checksum), the scan step each frame
+        arrived at (in-tick queueing latency: self-sends arrive at step 0,
+        each ppermute hop or credit stall adds one), and the per-rank
+        telemetry counter block (``repro.obs.counters`` layout),
+        accumulated device-side inside the scan.
         """
         R, T, W = tx.shape
         if R != self.n_ranks or W != self.config.frame_width:
@@ -420,7 +428,7 @@ class Router:
                 local,
                 mesh=self.mesh,
                 in_specs=(spec, spec),
-                out_specs=(spec, spec, spec, spec, spec),
+                out_specs=(spec, spec, spec, spec, spec, spec),
                 check_rep=False,
             )
         )
@@ -450,9 +458,12 @@ class Router:
         def select(levels, elig):
             """Pick one direction's link occupants: FIFO, or weighted
             round-robin over ListLevel credit classes (work-conserving —
-            quota a class leaves unused spills to the others)."""
+            quota a class leaves unused spills to the others).  Also
+            returns the number of frames admitted via the spill (the
+            ``link.spilled`` telemetry counter — 0 in FIFO mode, where no
+            class quotas exist to spill)."""
             if quotas is None:
-                return elig & (jnp.cumsum(elig) <= credits)
+                return elig & (jnp.cumsum(elig) <= credits), jnp.int32(0)
             cls = levels.astype(jnp.int32) % len(quotas)
             take = jnp.zeros_like(elig)
             for c, qc in enumerate(quotas):
@@ -460,7 +471,8 @@ class Router:
                 take = take | (in_c & (jnp.cumsum(in_c) <= qc))
             rest = elig & ~take
             spill = credits - jnp.sum(take)
-            return take | (rest & (jnp.cumsum(rest) <= spill))
+            spilled = rest & (jnp.cumsum(rest) <= spill)
+            return take | spilled, jnp.sum(spilled, dtype=jnp.int32)
 
         def hop(queue, take, axis, perm, extra=None):
             """Scatter this direction's occupants into the link buffer and
@@ -483,6 +495,10 @@ class Router:
             adir = arr[:, W + 1].astype(jnp.int32) if extra is not None else None
             return arr[:, :W], avalid, adir
 
+        NC = n_counters(len(axes))
+        IDX_DELIVERED = global_index(len(axes), "delivered")
+        IDX_CRC_FAIL = global_index(len(axes), "crc_fail")
+
         def local(tx, tx_valid):  # (1, T, W), (1, T) — one device's view
             coords = [jax.lax.axis_index(a) for a in axes]
             me = sum(
@@ -497,11 +513,20 @@ class Router:
             rx_step = jnp.zeros((rx_cap,), jnp.int32)
             ok = jnp.array(True)
             step_no = jnp.int32(0)
+            # telemetry counter block (obs.counters layout), accumulated
+            # device-side alongside the routing itself.  Every field is an
+            # order-independent EVENT count (sums of takes, anys of demand)
+            # so the fused and three-program paths — whose queue layouts
+            # and static scan bounds differ — agree bit-for-bit.
+            ctr = jnp.zeros((NC,), jnp.int32)
 
             # self-sends never cross a link: deliver them up front
             self_take = qvalid & (route_dst(queue) == me)
             rx, rx_cnt, rx_step, ok = _append(
                 rx, rx_cnt, rx_step, ok, queue, self_take, step_no
+            )
+            ctr = ctr.at[IDX_DELIVERED].add(
+                jnp.sum(self_take, dtype=jnp.int32)
             )
             qvalid = qvalid & ~self_take
 
@@ -529,18 +554,38 @@ class Router:
                 qdst = self._coord(route_dst(queue), ai).astype(jnp.int32)
                 qlvl = queue[:, HDR_LEVEL]
                 qadp = route_adaptive(queue)
+                # source coordinate on this axis: a frame's FIRST hop on
+                # the axis happens on the device still at that coordinate,
+                # which is how `link.entered` counts each frame exactly
+                # once per axis (the observed demand_link_loads fold).
+                qsrc = self._coord(route_src(queue), ai).astype(jnp.int32)
+                ix_f = {
+                    f: ctr_index(ai, 0, f)
+                    for f in ("entered", "forwarded", "starved",
+                              "defect_out", "spare_in", "spilled",
+                              "occupied")
+                }
+                ix_b = {f: ctr_index(ai, 1, f) for f in ix_f}
 
                 def step(carry, ai=ai, axis=axis, n_axis=n_axis,
                          myc=myc, half=half, use_fwd=use_fwd,
                          use_bwd=use_bwd, fwd_perm=fwd_perm,
-                         bwd_perm=bwd_perm, defect=defect):
+                         bwd_perm=bwd_perm, defect=defect,
+                         ix_f=ix_f, ix_b=ix_b):
+                    # new carry state (qsrc, ctr) rides at the END of the
+                    # tuple so `more_of`'s positional reads stay valid
                     if defect:
                         (queue, qdst, qlvl, qadp, qdir, qvalid,
-                         rx, rx_cnt, rx_step, ok, step_no, sf, sb) = carry
+                         rx, rx_cnt, rx_step, ok, step_no, sf, sb,
+                         qsrc, ctr) = carry
                     else:
                         (queue, qdst, qlvl, qadp, qvalid,
-                         rx, rx_cnt, rx_step, ok, step_no) = carry
+                         rx, rx_cnt, rx_step, ok, step_no,
+                         qsrc, ctr) = carry
                     step_no = step_no + 1
+
+                    def count(take):
+                        return jnp.sum(take, dtype=jnp.int32)
                     # inject: frames still off-coordinate on this axis, up
                     # to `credits` per direction per step, scheduled by
                     # `select` (transit priority comes from arrivals being
@@ -557,8 +602,14 @@ class Router:
                         go_bwd = jnp.where(qdir == 0, prefer_bwd, qdir == 2)
                     else:
                         go_bwd = prefer_bwd
-                    take_f = select(qlvl, elig & ~go_bwd) if use_fwd else None
-                    take_b = select(qlvl, elig & go_bwd) if use_bwd else None
+                    take_f, spill_f = (
+                        select(qlvl, elig & ~go_bwd) if use_fwd
+                        else (None, None)
+                    )
+                    take_b, spill_b = (
+                        select(qlvl, elig & go_bwd) if use_bwd
+                        else (None, None)
+                    )
                     if defect:
                         # per-(link, direction) starvation: demand this
                         # direction's credits left waiting THIS step
@@ -589,6 +640,42 @@ class Router:
                         ).astype(jnp.int32)
                         sf = jnp.where(starved_f, sf + 1, 0)
                         sb = jnp.where(starved_b, sb + 1, 0)
+                        # a defector leaves its preferred direction
+                        # (defect_out) and consumes the opposite one's
+                        # spare credits (spare_in): globally the two sum
+                        # to the same total
+                        ctr = ctr.at[ix_f["defect_out"]].add(count(extra_b))
+                        ctr = ctr.at[ix_b["spare_in"]].add(count(extra_b))
+                        ctr = ctr.at[ix_b["defect_out"]].add(count(extra_f))
+                        ctr = ctr.at[ix_f["spare_in"]].add(count(extra_f))
+                    # per-(direction) telemetry — all pure event counts
+                    # over demand and takes, so identical whatever static
+                    # scan bound or queue layout produced them: `entered`
+                    # only at a frame's first hop on the axis (device
+                    # coordinate still equals the frame's source
+                    # coordinate), `occupied`/`starved` as per-step demand
+                    # booleans (steps with no eligible demand add 0, which
+                    # is what keeps differing scan bounds invisible).
+                    if use_fwd:
+                        el_f = elig & ~go_bwd
+                        ctr = ctr.at[ix_f["entered"]].add(
+                            count(take_f & (qsrc == myc)))
+                        ctr = ctr.at[ix_f["forwarded"]].add(count(take_f))
+                        ctr = ctr.at[ix_f["spilled"]].add(spill_f)
+                        ctr = ctr.at[ix_f["occupied"]].add(
+                            jnp.any(el_f).astype(jnp.int32))
+                        ctr = ctr.at[ix_f["starved"]].add(
+                            jnp.any(el_f & ~take_f).astype(jnp.int32))
+                    if use_bwd:
+                        el_b = elig & go_bwd
+                        ctr = ctr.at[ix_b["entered"]].add(
+                            count(take_b & (qsrc == myc)))
+                        ctr = ctr.at[ix_b["forwarded"]].add(count(take_b))
+                        ctr = ctr.at[ix_b["spilled"]].add(spill_b)
+                        ctr = ctr.at[ix_b["occupied"]].add(
+                            jnp.any(el_b).astype(jnp.int32))
+                        ctr = ctr.at[ix_b["starved"]].add(
+                            jnp.any(el_b & ~take_b).astype(jnp.int32))
                     arrs, avalids, adirs = [], [], []
                     ex = qdir if defect else None
                     if use_fwd:
@@ -612,6 +699,7 @@ class Router:
                     rx, rx_cnt, rx_step, ok = _append(
                         rx, rx_cnt, rx_step, ok, arr, done, step_no
                     )
+                    ctr = ctr.at[IDX_DELIVERED].add(count(done))
                     # transit frames re-queue at the FRONT (FIFO per path);
                     # the hoisted columns ride the same stable partition
                     cvalid = jnp.concatenate([avalid & ~done, qvalid])
@@ -622,29 +710,35 @@ class Router:
                     ])
                     clvl = jnp.concatenate([arr[:, HDR_LEVEL], qlvl])
                     cadp = jnp.concatenate([route_adaptive(arr), qadp])
+                    csrc = jnp.concatenate([
+                        self._coord(route_src(arr), ai).astype(jnp.int32),
+                        qsrc,
+                    ])
                     if defect:
                         cdir = jnp.concatenate([jnp.concatenate(adirs), qdir])
-                        qvalid, (queue, qdst, qlvl, qadp, qdir), over = \
+                        qvalid, (queue, qdst, qlvl, qadp, qdir, qsrc), over = \
                             _compact_to(cvalid, q_cap, comb, cdst, clvl,
-                                        cadp, cdir)
+                                        cadp, cdir, csrc)
                         ok = ok & ~over
                         return (queue, qdst, qlvl, qadp, qdir, qvalid,
-                                rx, rx_cnt, rx_step, ok, step_no, sf, sb)
-                    qvalid, (queue, qdst, qlvl, qadp), over = _compact_to(
-                        cvalid, q_cap, comb, cdst, clvl, cadp
-                    )
+                                rx, rx_cnt, rx_step, ok, step_no, sf, sb,
+                                qsrc, ctr)
+                    qvalid, (queue, qdst, qlvl, qadp, qsrc), over = \
+                        _compact_to(cvalid, q_cap, comb, cdst, clvl, cadp,
+                                    csrc)
                     ok = ok & ~over
                     return (queue, qdst, qlvl, qadp, qvalid,
-                            rx, rx_cnt, rx_step, ok, step_no)
+                            rx, rx_cnt, rx_step, ok, step_no,
+                            qsrc, ctr)
 
                 if defect:
                     init = (queue, qdst, qlvl, qadp,
                             jnp.zeros((q_cap,), jnp.int32), qvalid,
                             rx, rx_cnt, rx_step, ok, step_no,
-                            jnp.int32(0), jnp.int32(0))
+                            jnp.int32(0), jnp.int32(0), qsrc, ctr)
                 else:
                     init = (queue, qdst, qlvl, qadp, qvalid,
-                            rx, rx_cnt, rx_step, ok, step_no)
+                            rx, rx_cnt, rx_step, ok, step_no, qsrc, ctr)
 
                 if cfg.early_exit:
                     # stop as soon as no device anywhere still holds a frame
@@ -680,16 +774,21 @@ class Router:
                     )
                 if defect:
                     (queue, qdst, qlvl, qadp, _, qvalid,
-                     rx, rx_cnt, rx_step, ok, step_no, _, _) = out
+                     rx, rx_cnt, rx_step, ok, step_no, _, _, _, ctr) = out
                 else:
                     (queue, qdst, qlvl, qadp, qvalid,
-                     rx, rx_cnt, rx_step, ok, step_no) = out
+                     rx, rx_cnt, rx_step, ok, step_no, _, ctr) = out
 
             # anything still queued is undeliverable (bad dst / starved link)
             ok = ok & ~jnp.any(qvalid)
             live = jnp.arange(rx_cap) < rx_cnt
-            crc_ok = jnp.all(jnp.where(live, verify_frames(rx), True))
-            return rx[None], rx_cnt[None], ok[None], crc_ok[None], rx_step[None]
+            frame_crc = verify_frames(rx)
+            crc_ok = jnp.all(jnp.where(live, frame_crc, True))
+            ctr = ctr.at[IDX_CRC_FAIL].add(
+                jnp.sum(live & ~frame_crc, dtype=jnp.int32)
+            )
+            return (rx[None], rx_cnt[None], ok[None], crc_ok[None],
+                    rx_step[None], ctr[None])
 
         return local
 
@@ -713,7 +812,8 @@ class Router:
         themselves.
 
         Returns device arrays ``(rx_hdr (R, cap, HDR_WORDS), rx_pay
-        (R, cap, frame_words), rx_cnt, ok, crc_ok, rx_step)``; the caller
+        (R, cap, frame_words), rx_cnt, ok, crc_ok, rx_step, counters)``
+        (``counters`` in the ``repro.obs.counters`` layout); the caller
         materializes host bytes only at reassembly time (``Mailbox.recv``).
         """
         key = (payloads.shape[1], payloads.shape[2], axis_steps, total)
@@ -765,12 +865,12 @@ class Router:
             tx_valid = (
                 svalid[0][:, None] & (fidx < n_live[:, None])
             ).reshape(1, T)
-            rx, rx_cnt, ok, crc_ok, rx_step = route_local(tx, tx_valid)
+            rx, rx_cnt, ok, crc_ok, rx_step, ctr = route_local(tx, tx_valid)
             # RX split, per-device (slicing — bit-identical to the Pallas
             # ``unpack_frames_batch`` twin used by the three-program path)
             return (
                 rx[:, :, :HDR_WORDS], rx[:, :, HDR_WORDS:],
-                rx_cnt, ok, crc_ok, rx_step,
+                rx_cnt, ok, crc_ok, rx_step, ctr,
             )
 
         spec = P(self.axis_names)
@@ -779,7 +879,7 @@ class Router:
                 local,
                 mesh=self.mesh,
                 in_specs=(spec,) * 5,
-                out_specs=(spec,) * 6,
+                out_specs=(spec,) * 7,
                 check_rep=False,
             )
         )

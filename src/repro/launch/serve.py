@@ -430,6 +430,8 @@ def serve_requests_streaming(
     backpressure_chunks: int = 1,
     backpressure_hold: int = 3,
     analyze: bool = False,
+    metrics=None,
+    trace=None,
 ) -> List[bytes]:
     """Answer N request wires with token-level streamed responses.
 
@@ -480,6 +482,16 @@ def serve_requests_streaming(
     on the same inputs (the streamed tokens are re-serialized through the
     same bulk SER).  Falls back to the local batched plane (no streaming
     events) when the fabric would have fewer than 2 ranks.
+
+    ``metrics`` (an ``obs.metrics.MetricsRegistry``) turns on serve-level
+    telemetry — per-stream TTFT (``serve.ttft_s``), per-tick token rate
+    (``serve.tick.tokens`` + the final ``serve.tokens_per_s`` gauge), and
+    the per-class backpressure feedback values (``serve.backpressure.p95``)
+    — and is shared with the fabric, the batchers, the lanes, and the
+    reader, so one ``snapshot()`` covers the whole stack.  ``trace`` (an
+    ``obs.trace.TraceRecorder``) records the tick/chunk/recompile
+    timeline.  Both are observation-only: tokens and final wires are
+    byte-identical with or without them (property-tested).
     """
     from ..stream import ChunkLane, StreamReader
 
@@ -491,6 +503,10 @@ def serve_requests_streaming(
             params, cfg, wires, max_new=max_new, pad_to=pad_to,
             slots=slots, admit_cap=admit_cap,
         )
+    if metrics is not None:
+        fabric.metrics = metrics  # one registry across the whole stack
+    if trace is not None:
+        fabric.trace = trace
     if analyze:
         _analyze_serve(fabric, len(wires), "serve_requests_streaming")
     shards = list(range(1, fabric.n_ranks))
@@ -532,7 +548,7 @@ def serve_requests_streaming(
         if bad:
             raise RuntimeError(f"shard {s}: corrupt request frames from {bad}")
         local_reqs = decode_request_batch([d.wire for d in arrived])
-        batcher = ContinuousBatcher(params, cfg, sched)
+        batcher = ContinuousBatcher(params, cfg, sched, metrics=metrics)
         batchers[s] = batcher
         for k, (_, prompts) in enumerate(local_reqs):
             lvl = levels[globals_of[s][k]]
@@ -541,7 +557,8 @@ def serve_requests_streaming(
                 ChunkLane(box, 0, list_level=lvl,
                           p95_threshold=backpressure_p95,
                           clamp_chunks=backpressure_chunks,
-                          max_hold=backpressure_hold),
+                          max_hold=backpressure_hold,
+                          metrics=metrics),
             )
             for j, p in enumerate(prompts):
                 batcher.submit((k, j), p)
@@ -550,13 +567,32 @@ def serve_requests_streaming(
                 expected.append((s, sid))
 
     # the streamed tick pipeline
-    reader = StreamReader()
+    reader = StreamReader(metrics=metrics)
+    t_serve0 = time.perf_counter()
+    seen_first: set = set()  # stream keys that produced their first token
+    tok_count = [0, 0]  # [total tokens arrived, tokens this tick]
 
     def _pump() -> None:
         for ev in reader.feed(ingress.recv()):
             if not ev.ok:
                 raise RuntimeError(
                     f"ingress: corrupt stream chunks from shard {ev.src}"
+                )
+            tok_count[0] += len(ev.tokens)
+            tok_count[1] += len(ev.tokens)
+            if metrics is not None and ev.tokens:
+                key = (ev.src, ev.stream_id)
+                if key not in seen_first:
+                    seen_first.add(key)
+                    ttft = time.perf_counter() - t_serve0
+                    metrics.histogram("serve.ttft_s", base=0.001).observe(ttft)
+                    metrics.series("serve.ttft_s.series").append(ttft)
+            if trace is not None:
+                trace.instant(
+                    "stream.chunk", cat="stream", pid=ev.src,
+                    args={"stream": ev.stream_id, "step": ev.step,
+                          "tokens": len(ev.tokens),
+                          "arrive_step": ev.arrive_step},
                 )
             if on_event is not None:
                 on_event(ev)
@@ -565,17 +601,30 @@ def serve_requests_streaming(
                 m = globals_of[ev.src][k]
                 for t, tok in enumerate(ev.tokens):
                     on_token(m, j, ev.step + t, tok)
+        per_class = (
+            reader.class_arrive_stats(window=64)
+            if (backpressure_p95 is not None or metrics is not None)
+            else {}
+        )
+        if metrics is not None:
+            # the live backpressure feedback values, recorded whether or
+            # not a threshold acts on them — the observability of the loop
+            # must not depend on the loop being closed
+            for cls, st in per_class.items():
+                metrics.series("serve.backpressure.p95",
+                               cls=cls).append(st["p95"])
         if backpressure_p95 is not None:
             # close the loop: the reader's per-class p95 arrive latency
             # clamps (or releases) each lane's flush rate for next tick;
             # the sliding window lets a clamped tenant recover once its
             # congested tail has drained
-            per_class = reader.class_arrive_stats(window=64)
             for lane in lanes.values():
                 st = per_class.get(lane.list_level)
                 lane.feedback(st["p95"] if st else None)
 
     while any(b.pending or b.n_active for b in batchers.values()):
+        t_tick0 = trace.now_us() if trace is not None else 0.0
+        tok_count[1] = 0
         for b in batchers.values():
             b.step_begin()  # dispatch compute; device runs in background
         if overlap:
@@ -591,6 +640,12 @@ def serve_requests_streaming(
         else:
             fabric.exchange()
             _pump()
+        if metrics is not None:
+            metrics.series("serve.tick.tokens").append(tok_count[1])
+        if trace is not None:
+            trace.complete("serve.tick", t_tick0,
+                           trace.now_us() - t_tick0, cat="serve",
+                           args={"tokens_arrived": tok_count[1]})
 
     # drain: force out any bursts a clamped lane is still holding, then
     # complete the in-flight tick and any stragglers
@@ -603,6 +658,10 @@ def serve_requests_streaming(
         _pump()
     if not reader.all_eos(expected):
         raise RuntimeError("streaming serve: streams did not reach EOS")
+    if metrics is not None:
+        dt = max(time.perf_counter() - t_serve0, 1e-9)
+        metrics.gauge("serve.tokens_per_s").set(tok_count[0] / dt)
+        metrics.counter("serve.tokens").add(tok_count[0])
 
     # final wires from the streamed tokens — same bulk SER as the batched
     # plane, so the result is byte-identical to serve_requests
@@ -654,8 +713,23 @@ def main() -> None:
                     help="for --streaming: clamp a tenant lane's flush "
                          "rate while its QoS class's p95 arrive latency "
                          "(router steps) exceeds this threshold")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the run's metrics snapshot (repro.obs "
+                         "registry + environment meta) as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON timeline of ticks, "
+                         "chunk arrivals and recompiles (load in "
+                         "chrome://tracing or ui.perfetto.dev)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    metrics = trace = None
+    if args.metrics_json or args.trace_out:
+        from ..obs import MetricsRegistry, TraceRecorder
+
+        metrics = MetricsRegistry()
+        if args.trace_out:
+            trace = TraceRecorder()
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -687,6 +761,8 @@ def main() -> None:
             overlap=not args.no_overlap, routing=args.routing,
             defect_after=args.defect_after,
             backpressure_p95=args.backpressure_p95,
+            metrics=metrics,
+            trace=trace,
             on_token=lambda m, j, step, tok: first_tok_t.append(time.time())
             if not first_tok_t else None,
         )
@@ -715,6 +791,22 @@ def main() -> None:
     if first_tok_t:
         print(f"[serve] time-to-first-token {first_tok_t[0] - t0:.3f}s "
               f"(vs {dt:.2f}s total)")
+    if args.metrics_json and metrics is not None:
+        import json as _json
+
+        from ..obs.report import environment_meta
+
+        snap = metrics.snapshot()
+        snap["meta"] = environment_meta()
+        with open(args.metrics_json, "w") as f:
+            _json.dump(snap, f, indent=1)
+            f.write("\n")
+        print(f"[serve] metrics snapshot -> {args.metrics_json} "
+              f"({len(snap['metrics'])} metrics)")
+    if args.trace_out and trace is not None:
+        trace.save(args.trace_out)
+        print(f"[serve] trace timeline -> {args.trace_out} "
+              f"({len(trace.events)} events)")
     rid, outs = decode_response(resp_wires[0])
     for i, o in enumerate(outs[:2]):
         print(f"  req {rid} out[{i}][:8] = {o[:8]}")

@@ -1,0 +1,69 @@
+"""repro.obs — the telemetry plane.
+
+Three layers (see ISSUE/README "Observability"):
+
+* **device counters** (:mod:`repro.obs.counters`): layout of the int32
+  counter block the router scan carry accumulates on-device, plus the
+  host folds that turn per-rank deltas into the observed per-(link,
+  direction) load matrix — the runtime counterpart of the static
+  ``repro.analysis.comm.demand_link_loads`` matrix;
+* **metrics registry** (:mod:`repro.obs.metrics`): labeled Counter /
+  Gauge / log2-bucket Histogram / Series with one ``snapshot()``, and
+  the shared arrive-window statistics both the fabric and the stream
+  reader report through;
+* **export** (:mod:`repro.obs.trace`, :mod:`repro.obs.report`):
+  Chrome-trace JSON timelines and text/JSON metric reports, plus
+  ``python -m repro.obs`` to summarize or ``--validate`` either artifact.
+"""
+from .counters import (
+    CTR_FIELDS,
+    CTR_GLOBALS,
+    counters_to_dict,
+    ctr_index,
+    global_index,
+    load_drift,
+    n_counters,
+    observed_link_loads,
+    static_load_frames,
+)
+from .metrics import (
+    SNAPSHOT_SCHEMA,
+    ClassWindows,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Series,
+    format_key,
+    validate_snapshot,
+    window_stats,
+)
+from .report import environment_meta, render_json, render_text
+from .trace import TraceRecorder, validate_trace
+
+__all__ = [
+    "CTR_FIELDS",
+    "CTR_GLOBALS",
+    "ClassWindows",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "SNAPSHOT_SCHEMA",
+    "Series",
+    "TraceRecorder",
+    "counters_to_dict",
+    "ctr_index",
+    "environment_meta",
+    "format_key",
+    "global_index",
+    "load_drift",
+    "n_counters",
+    "observed_link_loads",
+    "render_json",
+    "render_text",
+    "static_load_frames",
+    "validate_snapshot",
+    "validate_trace",
+    "window_stats",
+]

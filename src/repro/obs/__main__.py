@@ -1,0 +1,105 @@
+"""CLI: summarize or schema-check a telemetry artifact.
+
+::
+
+    python -m repro.obs metrics.json              # render a text report
+    python -m repro.obs trace.json --validate     # schema-check (CI gate)
+
+The file kind is auto-detected: a ``traceEvents`` key (or a bare JSON
+array) is a Chrome trace; anything with a ``metrics`` list is a metrics
+snapshot (a wrapping ``meta`` block is surfaced, not required).  With
+``--validate`` the exit code is nonzero on any schema problem — that is
+what CI runs against the uploaded artifacts."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .metrics import validate_snapshot
+from .report import render_text
+from .trace import validate_trace
+
+
+def _detect(obj) -> str:
+    if isinstance(obj, list):
+        return "trace"
+    if isinstance(obj, dict):
+        if "traceEvents" in obj:
+            return "trace"
+        if isinstance(obj.get("metrics"), list):
+            return "metrics"
+    return "unknown"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Summarize or validate a repro telemetry artifact "
+        "(metrics snapshot or Chrome-trace JSON).",
+    )
+    ap.add_argument("file", help="metrics snapshot or trace JSON file")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check only; exit nonzero on problems")
+    ap.add_argument("--kind", choices=("auto", "metrics", "trace"),
+                    default="auto", help="override artifact detection")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.file) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot load {args.file}: {e}", file=sys.stderr)
+        return 2
+
+    kind = _detect(obj) if args.kind == "auto" else args.kind
+    if kind == "unknown":
+        print(f"error: {args.file} is neither a metrics snapshot nor a "
+              "Chrome trace (use --kind to force)", file=sys.stderr)
+        return 2
+
+    if kind == "trace":
+        errs = validate_trace(obj)
+        n = len(obj if isinstance(obj, list) else obj.get("traceEvents", []))
+        if errs:
+            for e in errs:
+                print(f"invalid trace: {e}", file=sys.stderr)
+            return 1
+        print(f"{args.file}: valid Chrome trace, {n} events")
+        if not args.validate:
+            names = {}
+            events = obj if isinstance(obj, list) else obj["traceEvents"]
+            for ev in events:
+                if isinstance(ev, dict) and ev.get("ph") != "M":
+                    names[ev.get("name")] = names.get(ev.get("name"), 0) + 1
+            for name, cnt in sorted(names.items()):
+                print(f"  {name}: {cnt}")
+        return 0
+
+    errs = validate_snapshot(obj)
+    if errs:
+        for e in errs:
+            print(f"invalid snapshot: {e}", file=sys.stderr)
+        return 1
+    if args.validate:
+        print(f"{args.file}: valid metrics snapshot, "
+              f"{len(obj.get('metrics', []))} metrics")
+        return 0
+    meta = obj.get("meta")
+    if isinstance(meta, dict):
+        ident = " ".join(
+            f"{k}={meta[k]}" for k in
+            ("backend", "n_devices", "jax_version", "git_sha")
+            if meta.get(k) is not None
+        )
+        if ident:
+            print(f"meta: {ident}")
+    print(render_text(obj))
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    try:
+        raise SystemExit(main())
+    except BrokenPipeError:  # `... | head` closed the pipe mid-report
+        raise SystemExit(0)

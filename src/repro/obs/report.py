@@ -1,0 +1,121 @@
+"""Render metrics snapshots + shared environment metadata.
+
+``render_text`` turns a :func:`repro.obs.metrics.MetricsRegistry.snapshot`
+dict into a human-readable report (one line per counter/gauge, a bucket
+sketch per histogram, tail stats per series); ``render_json`` is the
+machine form.  Both read metrics by ``name``/``type`` and ignore unknown
+keys, per the snapshot forward-compat contract.
+
+:func:`environment_meta` is the ONE place run provenance is assembled —
+the ``meta`` block in ``BENCH_*.json`` smoke snapshots, serve
+``--metrics-json`` exports, and CI artifacts all embed it, so a perf-gate
+comparison across machines can tell "regression" from "different
+hardware"."""
+from __future__ import annotations
+
+import datetime
+import json
+import subprocess
+from typing import List, Optional
+
+from .metrics import SNAPSHOT_SCHEMA, format_key, validate_snapshot
+
+__all__ = ["environment_meta", "render_text", "render_json"]
+
+
+def _git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else None
+    except Exception:
+        return None
+
+
+def environment_meta() -> dict:
+    """Run provenance: schema version, jax/backend/device identity, git
+    sha (None outside a checkout), and a UTC timestamp.  Readers treat
+    every field as optional."""
+    meta = {
+        "schema_version": SNAPSHOT_SCHEMA,
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "git_sha": _git_sha(),
+    }
+    try:
+        import jax
+
+        devs = jax.devices()
+        meta.update({
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "platform": devs[0].platform if devs else None,
+            "device_kind": devs[0].device_kind if devs else None,
+            "n_devices": len(devs),
+        })
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        meta["jax_version"] = None
+    return meta
+
+
+def _hist_sketch(row: dict, width: int = 20) -> str:
+    buckets = row.get("buckets") or []
+    peak = max(buckets) if buckets else 0
+    if not peak:
+        return "(empty)"
+    base = row.get("base", 1.0)
+    parts = []
+    for i, c in enumerate(buckets):
+        if c:
+            parts.append(f"<={base * (1 << i):g}:{c}")
+    return " ".join(parts)
+
+
+def render_text(snap: dict) -> str:
+    """Human-readable report of a metrics snapshot."""
+    lines: List[str] = [f"metrics snapshot (schema {snap.get('schema')})"]
+    problems = validate_snapshot(snap)
+    for p in problems:
+        lines.append(f"  !! {p}")
+    by_type = {"counter": [], "gauge": [], "histogram": [], "series": []}
+    for row in snap.get("metrics", []):
+        if isinstance(row, dict) and row.get("type") in by_type:
+            by_type[row["type"]].append(row)
+    for typ in ("counter", "gauge", "histogram", "series"):
+        rows = by_type[typ]
+        if not rows:
+            continue
+        lines.append(f"{typ}s ({len(rows)}):")
+        for row in rows:
+            key = format_key(row.get("name", "?"), row.get("labels") or {})
+            if typ in ("counter", "gauge"):
+                v = row.get("value")
+                v = f"{v:g}" if isinstance(v, float) else str(v)
+                lines.append(f"  {key} = {v}")
+            elif typ == "histogram":
+                lines.append(
+                    f"  {key}: n={row.get('count')} sum={row.get('sum'):g}"
+                    f" min={row.get('min')} max={row.get('max')}"
+                    f"  [{_hist_sketch(row)}]"
+                )
+            else:
+                vals = row.get("values") or []
+                tail = ", ".join(f"{v:g}" for v in vals[-6:])
+                lines.append(
+                    f"  {key}: n={len(vals)} last=[{tail}]"
+                )
+    if len(lines) == 1:
+        lines.append("  (no metrics)")
+    return "\n".join(lines)
+
+
+def render_json(snap: dict, meta: bool = True, **kw) -> str:
+    """Machine form: the snapshot itself, optionally wrapped with
+    :func:`environment_meta` provenance under ``meta``."""
+    out = dict(snap)
+    if meta:
+        out["meta"] = environment_meta()
+    return json.dumps(out, **kw)

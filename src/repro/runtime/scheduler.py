@@ -101,12 +101,16 @@ def _scatter_rows(cache: PyTree, cur_tok: jnp.ndarray, new_cache: PyTree,
 class ContinuousBatcher:
     """Admit/decode/evict loop over a fixed-slot KV cache."""
 
-    def __init__(self, params: PyTree, cfg: ModelConfig, sched: SchedulerConfig):
+    def __init__(self, params: PyTree, cfg: ModelConfig,
+                 sched: SchedulerConfig, metrics=None):
         from ..launch.steps import cached_serve_steps
 
         self.params = params
         self.cfg = cfg
         self.sched = sched
+        #: optional obs.metrics.MetricsRegistry (admit/evict counters,
+        #: occupancy + queue-depth gauges); None = no-op telemetry
+        self.metrics = metrics
         self.prefill_step, self.decode_step = cached_serve_steps(
             cfg, cache_len=sched.cache_len
         )
@@ -185,13 +189,19 @@ class ContinuousBatcher:
             seq.remaining = self.sched.max_new - 1
             self.active[free[j]] = seq
             self._tick_emit.append((seq.seq_id, 0, int(first[j])))
+        if self.metrics is not None:
+            self.metrics.counter("batcher.admitted").add(take)
         self._evict()
 
     def _evict(self) -> None:
+        evicted = 0
         for i, seq in enumerate(self.active):
             if seq is not None and seq.remaining <= 0:
                 self.done[seq.seq_id] = seq.out
                 self.active[i] = None
+                evicted += 1
+        if self.metrics is not None and evicted:
+            self.metrics.counter("batcher.evicted").add(evicted)
 
     def step_begin(self) -> bool:
         """Dispatch one scheduler tick: admit into free slots, then launch
@@ -203,6 +213,9 @@ class ContinuousBatcher:
         """
         self._tick_emit = []
         self._admit()
+        if self.metrics is not None:
+            self.metrics.gauge("batcher.occupancy").set(self.n_active)
+            self.metrics.gauge("batcher.queue_depth").set(len(self.pending))
         if self.n_active == 0:
             self._stepped = False
             return False
@@ -211,6 +224,8 @@ class ContinuousBatcher:
         )
         self.steps_run += 1
         self._stepped = True
+        if self.metrics is not None:
+            self.metrics.counter("batcher.steps").add(1)
         return True
 
     def step_finish(self) -> List[Tuple[Hashable, int, int]]:

@@ -31,40 +31,20 @@ token = one decode tick + one fabric tick, not the whole generation).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from ..obs.metrics import window_stats
 from .chunks import TokenChunk, decode_token_chunks, encode_chunk_burst
 
-
-def arrive_stats(steps: Iterable[int]) -> Dict[str, float]:
-    """Latency statistics over a trace of router arrive steps: ``mean``
-    tracks hop count + queueing, ``p95``/``max`` expose the tail a
-    far-shard or starved tenant produces, and ``jitter`` is the stddev —
-    the time-to-token wobble the shortest-path router shrinks.  Shared by
-    :meth:`StreamReader.arrive_stats`, :meth:`Fabric.class_arrive_stats`,
-    and the benchmarks so the producers and consumers of the backpressure
-    feedback loop can never disagree on what "p95" means.
-
-    ``p95`` is nearest-rank with a CEIL rank (``ceil(0.95 * n)``): the
-    smallest value with >= 95% of the trace at or below it.  The old
-    floor-indexed ``arr[int(0.95 * n)]`` was biased one rank high — at
-    n=20 it reported the maximum as "p95", inflating the very tail signal
-    the lane scheduler clamps on."""
-    arr = sorted(steps)
-    if not arr:
-        return {"n": 0, "mean": 0.0, "p95": 0.0, "max": 0.0, "jitter": 0.0}
-    n = len(arr)
-    mean = sum(arr) / n
-    var = sum((s - mean) ** 2 for s in arr) / n
-    return {
-        "n": n,
-        "mean": mean,
-        "p95": float(arr[min(n - 1, math.ceil(0.95 * n) - 1)]),
-        "max": float(arr[-1]),
-        "jitter": var ** 0.5,
-    }
+#: the ONE shared arrive-window implementation (``obs.metrics``): kept
+#: under its historical name here for the benchmarks and tests that import
+#: ``repro.stream.arrive_stats``.  ``Fabric.class_arrive_stats`` and
+#: :meth:`StreamReader.class_arrive_stats` both resolve to this same
+#: function, so the two ends of the backpressure feedback loop can never
+#: disagree on what "p95" means (see obs.metrics.window_stats for the
+#: ceil-rank percentile definition).
+arrive_stats = window_stats
 
 
 @dataclass
@@ -133,7 +113,8 @@ class ChunkLane:
 
     def __init__(self, mailbox, dst: int, list_level: int = 1,
                  p95_threshold: Optional[float] = None,
-                 clamp_chunks: int = 1, max_hold: int = 3):
+                 clamp_chunks: int = 1, max_hold: int = 3,
+                 metrics=None):
         self.mailbox = mailbox
         self.dst = dst
         self.list_level = list_level
@@ -145,6 +126,16 @@ class ChunkLane:
         self._held = 0  # consecutive fully-held flushes
         self.holds = 0  # flushes that held chunks back (observability)
         self.flushes = 0  # bursts actually mailed
+        #: optional obs.metrics.MetricsRegistry; None = no-op telemetry
+        #: (the no-telemetry path must exist so serve output can be
+        #: asserted byte-identical with and without a registry attached)
+        self.metrics = metrics
+
+    def _counter(self, name: str):
+        if self.metrics is None:
+            return None
+        return self.metrics.counter(name, dst=self.dst,
+                                    level=self.list_level)
 
     @property
     def clamped(self) -> bool:
@@ -155,11 +146,19 @@ class ChunkLane:
         """Feed the reader's p95 arrive latency for this lane's QoS class;
         clamps the flush rate while it exceeds ``p95_threshold``.  ``None``
         (no observation yet) never clamps."""
+        was = self._clamped
         self._clamped = (
             self.p95_threshold is not None
             and p95 is not None
             and p95 > self.p95_threshold
         )
+        if self.metrics is not None:
+            if p95 is not None:
+                self.metrics.series("stream.lane.feedback_p95",
+                                    dst=self.dst,
+                                    level=self.list_level).append(p95)
+            if self._clamped and not was:
+                self._counter("stream.lane.clamp_engaged").add(1)
 
     def writer(self, stream_id: int) -> StreamWriter:
         return StreamWriter(self, stream_id)
@@ -173,11 +172,13 @@ class ChunkLane:
         drain)."""
         if not self._pending:
             return 0
+        held_before = self.holds
         if self._clamped and not force:
             if self.clamp_chunks <= 0:  # full hold, bounded by max_hold
                 if self._held < self.max_hold:
                     self._held += 1
                     self.holds += 1
+                    self._note_flush(0, held_before)
                     return 0
                 chunks, self._pending = self._pending, []
             else:  # trickle: oldest chunks ride, the rest wait
@@ -192,7 +193,19 @@ class ChunkLane:
             self.dst, encode_chunk_burst(chunks), list_level=self.list_level
         )
         self.flushes += 1
+        self._note_flush(len(chunks), held_before)
         return len(chunks)
+
+    def _note_flush(self, sent: int, held_before: int) -> None:
+        if self.metrics is None:
+            return
+        if sent:
+            self._counter("stream.lane.flushes").add(1)
+            self._counter("stream.lane.chunks_sent").add(sent)
+        if self.holds > held_before:
+            self._counter("stream.lane.holds").add(1)
+            self.metrics.gauge("stream.lane.chunks_held", dst=self.dst,
+                               level=self.list_level).set(len(self._pending))
 
 
 @dataclass
@@ -216,27 +229,33 @@ class StreamState:
 class StreamReader:
     """Demultiplexes chunk bursts into per-stream token sequences."""
 
-    def __init__(self) -> None:
+    def __init__(self, metrics=None) -> None:
         self.streams: Dict[Tuple[int, int], StreamState] = {}
         #: deliveries whose bursts yielded no parseable chunk at all —
         #: corruption that cannot be attributed to a stream
         self.unattributed: List = []
+        #: optional obs.metrics.MetricsRegistry; None = no-op telemetry
+        self.metrics = metrics
 
     def feed(self, deliveries: Iterable) -> List[StreamEvent]:
         """Consume fabric deliveries; returns the fresh stream events."""
         events: List[StreamEvent] = []
+        m = self.metrics
         for d in deliveries:
             chunks, parsed = decode_token_chunks(d.wire)
             clean = bool(d.ok) and parsed
             if not chunks:
                 if not clean:
                     self.unattributed.append(d)
+                    if m is not None:
+                        m.counter("stream.reader.unattributed").add(1)
                 continue
             arrive = getattr(d, "arrive_step", None)
             for c in chunks:
                 key = (d.src, c.stream_id)
                 st = self.streams.setdefault(key, StreamState())
                 st.level = d.list_level
+                was_ok = st.ok
                 if not clean:
                     st.ok = False  # CRC/parse failure poisons this stream
                 if c.step != st.next_step or st.eos:
@@ -244,6 +263,16 @@ class StreamReader:
                 st.next_step = c.step + 1
                 st.tokens.extend(c.tokens)
                 st.eos = st.eos or c.eos
+                if m is not None:
+                    m.counter("stream.reader.chunks",
+                              level=d.list_level).add(1)
+                    m.counter("stream.reader.tokens",
+                              level=d.list_level).add(len(c.tokens))
+                    if was_ok and not st.ok:
+                        m.counter("stream.reader.corrupt_streams").add(1)
+                    if arrive is not None:
+                        m.histogram("stream.reader.arrive_step",
+                                    level=d.list_level).observe(arrive)
                 if arrive is not None:
                     # a delivery without the field contributes NO latency
                     # sample (recording 0 would claim an impossible
