@@ -120,6 +120,24 @@ def _perf_gate(baseline, metrics) -> None:
         sys.exit(1)
 
 
+def _maybe_slo(spec, metrics, values) -> None:
+    """Evaluate ``--slo`` targets against the bench run (the metrics
+    snapshot when one was collected, plus the modules' flat LAST_METRICS
+    under ``fabric.*`` / ``stream.*`` keys); exits 1 on any violation."""
+    if not spec:
+        return
+    from repro.obs import evaluate_slo
+
+    rep = evaluate_slo(
+        spec,
+        snapshot=metrics.snapshot() if metrics is not None else None,
+        values=values,
+    )
+    print(rep.render_text())
+    if not rep.ok:
+        sys.exit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -132,6 +150,11 @@ def main() -> None:
     ap.add_argument("--trace-out", metavar="PATH",
                     help="write a Chrome-trace JSON with one span per "
                          "bench module (chrome://tracing / Perfetto)")
+    ap.add_argument("--slo", metavar="SPEC",
+                    help="evaluate SLO targets against the bench metrics "
+                         "('k=v,k=v' inline or JSON file; flat keys like "
+                         "max:fabric.smoke_frames_per_s address each "
+                         "module's LAST_METRICS) and exit 1 on violation")
     args = ap.parse_args()
 
     from repro.obs import MetricsRegistry, TraceRecorder, environment_meta
@@ -185,6 +208,26 @@ def main() -> None:
                 f.write("\n")
         print(f"wrote {csv_path} ({len(all_tables)} tables)")
         _export()
+        # append this run to the perf trajectory: one JSONL row per smoke
+        # run, summarized by `python -m repro.obs history`
+        meta = environment_meta()
+        hist_path = REPO_ROOT / "experiments" / "bench_history.jsonl"
+        with open(hist_path, "a") as f:
+            f.write(json.dumps({
+                "git_sha": meta.get("git_sha"),
+                "timestamp": meta.get("timestamp"),
+                "metrics": {
+                    "fabric": getattr(bench_fabric, "LAST_METRICS", {}),
+                    "stream": getattr(bench_stream, "LAST_METRICS", {}),
+                },
+            }) + "\n")
+        print(f"appended {hist_path}", file=sys.stderr)
+        _maybe_slo(args.slo, metrics, {
+            **{f"fabric.{k}": v
+               for k, v in getattr(bench_fabric, "LAST_METRICS", {}).items()},
+            **{f"stream.{k}": v
+               for k, v in getattr(bench_stream, "LAST_METRICS", {}).items()},
+        })
         _perf_gate(baseline, bench_fabric.LAST_METRICS)
         return
 
@@ -210,6 +253,11 @@ def main() -> None:
             f.write("\n")
     print(f"wrote experiments/benchmarks.csv ({len(tables)} tables)")
     _export()
+    _maybe_slo(args.slo, metrics, {
+        f"{mod.__name__.rsplit('.', 1)[-1].replace('bench_', '')}.{k}": v
+        for _, mod in mods
+        for k, v in getattr(mod, "LAST_METRICS", {}).items()
+    })
 
 
 if __name__ == "__main__":

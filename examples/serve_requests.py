@@ -61,14 +61,24 @@ def main():
                          "every decode tick and report time-to-first-token")
     ap.add_argument("--n-shards", type=int, default=None)
     ap.add_argument("--metrics-json", metavar="PATH",
-                    help="with --streaming: write the serve metrics "
-                         "snapshot (TTFT, tokens/s, fabric counters) as "
-                         "JSON; inspect with `python -m repro.obs PATH`")
+                    help="with --sharded/--streaming: write the serve "
+                         "metrics snapshot (TTFT, tokens/s, fabric "
+                         "counters) as JSON; inspect with "
+                         "`python -m repro.obs PATH`")
     ap.add_argument("--trace-out", metavar="PATH",
-                    help="with --streaming: write a Chrome-trace JSON of "
-                         "the streamed run (serve ticks, chunk arrivals) "
-                         "for chrome://tracing / Perfetto")
+                    help="with --sharded/--streaming: write a Chrome-trace "
+                         "JSON of the fabric/serve timeline (ticks, chunk "
+                         "arrivals, request flow arcs) for "
+                         "chrome://tracing / Perfetto")
     args = ap.parse_args()
+    metrics = trace = None
+    if args.metrics_json or args.trace_out:
+        from repro.obs import MetricsRegistry, TraceRecorder
+
+        if args.metrics_json:
+            metrics = MetricsRegistry()
+        if args.trace_out:
+            trace = TraceRecorder()
     cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=4)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -112,7 +122,7 @@ def main():
             t0 = time.time()
             shard_wires = serve_requests_sharded(
                 params, cfg, wires, max_new=MAX_NEW, pad_to=PAD_TO, slots=8,
-                fabric=fabric,
+                fabric=fabric, metrics=metrics, trace=trace,
             )
             dt_shard = time.time() - t0
             assert shard_wires == resp_wires, \
@@ -131,14 +141,6 @@ def main():
             print("[streaming]  skipped: needs >= 2 devices (set "
                   "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
         else:
-            metrics = trace = None
-            if args.metrics_json or args.trace_out:
-                from repro.obs import MetricsRegistry, TraceRecorder
-
-                if args.metrics_json:
-                    metrics = MetricsRegistry()
-                if args.trace_out:
-                    trace = TraceRecorder()
             arrivals = []
             t0 = time.time()
             stream_wires = serve_requests_streaming(
@@ -149,21 +151,6 @@ def main():
                     arrivals.append(time.time() - t0),
             )
             dt_stream = time.time() - t0
-            if metrics is not None:
-                import json
-
-                from repro.obs import environment_meta
-
-                snap = metrics.snapshot()
-                snap["meta"] = environment_meta()
-                with open(args.metrics_json, "w") as f:
-                    json.dump(snap, f, indent=1)
-                print(f"[streaming]  wrote {args.metrics_json} "
-                      f"({len(snap['metrics'])} metrics)")
-            if trace is not None:
-                trace.save(args.trace_out)
-                print(f"[streaming]  wrote {args.trace_out} "
-                      f"({len(trace.events)} events)")
             assert stream_wires == resp_wires, \
                 "streaming plane diverged from the batched plane"
             print(f"[streaming]  same burst streamed per decode tick "
@@ -196,6 +183,23 @@ def main():
     ], "sequential and batched paths disagree"
     print(f"[sequential] same burst, same tokens, in {dt_seq:.2f}s "
           f"({n_tok / dt_seq:.1f} tok/s) -> batched is {dt_seq / dt_batched:.1f}x")
+
+    # --- telemetry artifacts (whichever fabric modes ran) --------------
+    if metrics is not None:
+        import json
+
+        from repro.obs import environment_meta
+
+        snap = metrics.snapshot()
+        snap["meta"] = environment_meta()
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=1)
+        print(f"[obs]        wrote {args.metrics_json} "
+              f"({len(snap['metrics'])} metrics)")
+    if trace is not None:
+        trace.save(args.trace_out)
+        print(f"[obs]        wrote {args.trace_out} "
+              f"({len(trace.events)} events)")
 
 
 if __name__ == "__main__":

@@ -74,9 +74,11 @@ from ..analysis.rules import list_level_error, max_ranks_error
 from ..obs.counters import (
     CTR_FIELDS,
     DIR_SLOTS,
+    FrameAttribution,
     ctr_index,
     global_index,
     load_drift as _load_drift,
+    n_att,
     n_counters,
     observed_link_loads as _observed_link_loads,
 )
@@ -102,13 +104,23 @@ class Delivery:
     the ListLevel its frames carried (paper §IV-C; senders can use it to
     tag streams, e.g. MoE expert ids or QoS tenant classes), and the router
     scan step its last frame arrived at (in-tick queueing latency — the
-    observable the QoS credit classes bound)."""
+    observable the QoS credit classes bound).
+
+    ``attribution`` is the flight-recorder vector of the message's
+    *critical* frame (the one that arrived last): queue wait + credit
+    stall + per-axis transit + defections, with ``attribution.arrive_step
+    == arrive_step`` exactly.  ``request_id`` is the span id the sender
+    attached (``Fabric.send(request_id=...)``), correlated back through
+    the route word's ``(src, dst, seq)`` range — None for untracked
+    sends."""
 
     src: int
     wire: bytes
     ok: bool = True
     list_level: int = 1
     arrive_step: int = 0
+    attribution: Optional[FrameAttribution] = None
+    request_id: Optional[int] = None
 
 
 @dataclass
@@ -117,6 +129,13 @@ class _PartialMsg:
     ok: bool = True
     level: int = 1
     step: int = 0
+    #: attribution row of the latest-arriving frame folded in so far
+    att: Optional[np.ndarray] = None
+    #: route-word seq of the message's first frame (rid correlation key)
+    seq0: Optional[int] = None
+    #: degradation detail — WHY ok went False (span annotations)
+    crc_bad: bool = False
+    seq_gap: bool = False
 
 
 def _wire_words(wire: bytes, cap_words: int) -> np.ndarray:
@@ -161,6 +180,16 @@ class Fabric:
             assert_clean(analyze_fabric(self), "Fabric(analyze=True)")
         R = self.router.n_ranks
         self._pending: List[Tuple[int, int, bytes, int]] = []  # (src, dst, wire, level)
+        #: request ids parallel to `_pending` (a separate list so every
+        #: consumer of the 4-tuples — analyze_sends, the dispatchers —
+        #: keeps its shape), and the in-flight rid->seq-range table:
+        #: {(dst, src): [(seq0, n_frames, rid), ...]} matched back at
+        #: reassembly through the route word.
+        self._pending_rids: List[Optional[int]] = []
+        self._send_spans: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
+        #: optional obs.spans.SpanTracker — deliveries with a request_id
+        #: emit fabric.deliver span events (and degrade on corruption)
+        self.spans = None
         # seq counters are per (src, dst) stream so a receiver's expected
         # base never lags: every frame of the (src -> me) stream lands here,
         # keeping the u16 wrap window exact.
@@ -217,8 +246,14 @@ class Fabric:
 
     # -- send side ---------------------------------------------------------
 
-    def send(self, src: int, dst: int, wire: bytes, list_level: int = 1) -> None:
+    def send(self, src: int, dst: int, wire: bytes, list_level: int = 1,
+             request_id: Optional[int] = None) -> None:
         """Queue ``wire`` for routed delivery ``src -> dst``.
+
+        ``request_id`` tags the message with a span id (obs.spans): the
+        receiver's :class:`Delivery` carries it back, correlated through
+        the route word's ``(src, dst, seq)`` range, so one request renders
+        as a connected arc across ranks.
 
         Arguments are validated HERE, with clear errors, rather than
         surfacing as shape mismatches or routing failures deep inside the
@@ -246,6 +281,9 @@ class Fabric:
             # keys credit classes on level % n_classes)
             raise ValueError(err)
         self._pending.append((src, dst, bytes(wire), int(list_level)))
+        self._pending_rids.append(
+            int(request_id) if request_id is not None else None
+        )
 
     # -- the fabric tick ---------------------------------------------------
 
@@ -285,6 +323,7 @@ class Fabric:
             )
             assert_clean(fs, "Fabric.exchange(analyze=True)")
         sends, self._pending = self._pending, []
+        rids, self._pending_rids = self._pending_rids, []
         phits = self.config.frame_phits
         frame_words = phits * PHIT_WORDS
         B = len(sends)
@@ -298,8 +337,16 @@ class Fabric:
         nbytes = np.asarray([len(w) for _, _, w, _ in sends], np.int32)
         routes = np.zeros((B, 3), np.int32)
         for i, (src, dst, _, _) in enumerate(sends):
-            routes[i] = (src, dst, self._tx_seq[src][dst])
-            self._tx_seq[src][dst] = (self._tx_seq[src][dst] + n_live[i]) % SEQ_MOD
+            seq0 = self._tx_seq[src][dst]
+            routes[i] = (src, dst, seq0)
+            self._tx_seq[src][dst] = (seq0 + n_live[i]) % SEQ_MOD
+            if rids[i] is not None:
+                # rid correlation: the message owns seqs [seq0, seq0+n) of
+                # the (src -> dst) stream; reassembly matches the first
+                # delivered frame's seq into this range
+                self._send_spans.setdefault((dst, src), []).append(
+                    (seq0, n_live[i], rids[i])
+                )
 
         # accumulate the tick's STATIC demand matrix (what the analyzer
         # predicts this traffic should put on every (link, direction)) so
@@ -446,9 +493,9 @@ class Fabric:
         self._inflight = None
         meta, self._inflight_meta = self._inflight_meta or {}, None
         if kind == "fused":  # RX split already happened inside the tick jit
-            rx_hdr, rx_pay, rx_cnt, ok, crc_ok, rx_step, ctr = out
+            rx_hdr, rx_pay, rx_cnt, ok, crc_ok, rx_step, rx_att, ctr = out
         else:
-            rx, rx_cnt, ok, crc_ok, rx_step, ctr = out
+            rx, rx_cnt, ok, crc_ok, rx_step, rx_att, ctr = out
         self.last_crc_ok = bool(np.all(np.asarray(crc_ok)))
         # counter readback rides the SAME host sync this reassembly already
         # pays — the dispatch path stays sync-free with counters on
@@ -460,10 +507,12 @@ class Fabric:
             )
         self.frames_routed += int(np.sum(np.asarray(rx_cnt)))
         rx_step = np.asarray(rx_step)
+        rx_att = np.asarray(rx_att)
         counts = [int(c) for c in np.asarray(rx_cnt)]
         if not any(counts):
             return
         steps = np.concatenate([rx_step[r, :c] for r, c in enumerate(counts) if c])
+        atts = np.concatenate([rx_att[r, :c] for r, c in enumerate(counts) if c])
         if kind == "fused":
             rx_hdr, rx_pay = np.asarray(rx_hdr), np.asarray(rx_pay)
             hdrs = np.concatenate([rx_hdr[r, :c] for r, c in enumerate(counts) if c])
@@ -479,7 +528,7 @@ class Fabric:
             if c:
                 self._reassemble(
                     r, hdrs[off : off + c], pays[off : off + c],
-                    steps[off : off + c],
+                    steps[off : off + c], atts[off : off + c],
                 )
                 off += c
 
@@ -522,15 +571,20 @@ class Fabric:
     def _reassemble(
         self, rank: int, hdrs: np.ndarray, pays: np.ndarray,
         steps: Optional[np.ndarray] = None,
+        atts: Optional[np.ndarray] = None,
     ) -> None:
         """Order a rank's delivered frames per source and cut messages at
         the end-of-list terminators."""
         if steps is None:
             steps = np.zeros(len(hdrs), np.int32)
+        if atts is None:
+            atts = np.zeros(
+                (len(hdrs), n_att(len(self.router.axis_names))), np.int32
+            )
         srcs = (hdrs[:, HDR_ROUTE] >> 24) & 0x7F  # bit 31 = adaptive flag
         for src in sorted(set(int(s) for s in srcs)):
             sel = srcs == src
-            mh, mp, ms = hdrs[sel], pays[sel], steps[sel]
+            mh, mp, ms, ma = hdrs[sel], pays[sel], steps[sel], atts[sel]
             base = self._rx_seq[rank][src]
             seqs = (mh[:, HDR_ROUTE] & 0xFFFF).astype(np.int64)
             order = np.argsort((seqs - base) % SEQ_MOD)
@@ -539,32 +593,90 @@ class Fabric:
             for j in order:
                 size = int(mh[j, HDR_SIZE])
                 part.level = int(mh[j, HDR_LEVEL])
+                if part.seq0 is None:
+                    part.seq0 = int(seqs[j])
+                # the message's attribution is its CRITICAL frame's — the
+                # one that arrived last (ties: the later seq wins; equal
+                # steps mean equal component sums)
+                sj = int(ms[j])
+                if part.att is None or sj >= part.step:
+                    part.att = ma[j].copy()
                 # scan steps restart at 0 each tick, but a message's frames
                 # all ride ONE tick (exchange frames every pending send
                 # together), so the max is within-tick; a partial spanning
                 # ticks means lost frames and the message is flagged anyway
-                part.step = max(part.step, int(ms[j]))
+                part.step = max(part.step, sj)
                 # CRC covers size | level | route | payload (frames.py)
                 covered = np.concatenate(
                     [mh[j, [HDR_SIZE, HDR_LEVEL, HDR_ROUTE]], mp[j]]
                 )
                 if int(mh[j, HDR_CRC]) != zlib.crc32(covered.tobytes()):
                     part.ok = False
+                    part.crc_bad = True
                 if int(seqs[j]) != expected:
                     # gap in the stream (lost/misrouted frame): the message
                     # around it cannot be trusted
                     part.ok = False
+                    part.seq_gap = True
                 expected = (int(seqs[j]) + 1) % SEQ_MOD
                 if size == 0:  # terminator: message complete
-                    self._inbox[rank].append(
-                        Delivery(src, bytes(part.data), part.ok, part.level,
-                                 part.step)
-                    )
-                    self._record_arrive(rank, part.level, part.step)
+                    self._deliver(rank, src, part)
                     self._partial[rank][src] = part = _PartialMsg()
                 else:
                     part.data.extend(mp[j].tobytes()[:size])
             self._rx_seq[rank][src] = expected
+
+    def _deliver(self, rank: int, src: int, part: _PartialMsg) -> None:
+        """Finalize one reassembled message: attach its flight-recorder
+        attribution and (when the sender tagged it) its request id, emit
+        the span events, and append the Delivery to the rank's inbox."""
+        n_axes = len(self.router.axis_names)
+        att = FrameAttribution.from_vector(
+            n_axes, part.att if part.att is not None else [0] * n_att(n_axes)
+        )
+        rid = self._match_rid(rank, src, part.seq0)
+        self._inbox[rank].append(
+            Delivery(src, bytes(part.data), part.ok, part.level, part.step,
+                     attribution=att, request_id=rid)
+        )
+        self._record_arrive(rank, part.level, part.step, att)
+        if self.spans is None:
+            return
+        if rid is not None:
+            self.spans.event(
+                rid, "fabric.deliver", pid=rank,
+                src=src, dst=rank, arrive_step=part.step,
+                **att.components(),
+            )
+            for name, v in att.components().items():
+                self.spans.add_component(rid, f"fabric.{name}", v)
+            if not part.ok:
+                reasons = [r for r, bad in
+                           (("crc", part.crc_bad), ("seq-gap", part.seq_gap))
+                           if bad]
+                self.spans.degrade(rid, ",".join(reasons) or "corrupt",
+                                   src=src, dst=rank)
+        elif not part.ok:
+            # a corrupted message that cannot be correlated back to its
+            # request (e.g. its first frame's route word was mangled) must
+            # surface as a tracker anomaly, never vanish silently
+            self.spans.anomaly(
+                "fabric.deliver.unmatched", src=src, dst=rank,
+                seq0=part.seq0, crc=part.crc_bad, seq_gap=part.seq_gap,
+            )
+
+    def _match_rid(self, rank: int, src: int,
+                   seq0: Optional[int]) -> Optional[int]:
+        """Match a reassembled message's first-frame seq into the pending
+        (src -> rank) rid ranges recorded at dispatch (wrap-aware)."""
+        spans = self._send_spans.get((rank, src))
+        if not spans or seq0 is None:
+            return None
+        for i, (s0, n, rid) in enumerate(spans):
+            if (seq0 - s0) % SEQ_MOD < n:
+                spans.pop(i)
+                return rid
+        return None
 
     def drain(self, rank: int) -> List[Delivery]:
         out, self._inbox[rank] = self._inbox[rank], []
@@ -671,10 +783,18 @@ class Fabric:
         """QoS credit classes the router schedules (1 = single-class FIFO)."""
         return len(self.config.qos_weights) if self.config.qos_weights else 1
 
-    def _record_arrive(self, rank: int, level: int, step: int) -> None:
+    def _record_arrive(self, rank: int, level: int, step: int,
+                       att: Optional[FrameAttribution] = None) -> None:
         cls = level % self.n_classes
         self._arrive[rank].record(cls, step)
         self.metrics.histogram("fabric.arrive.step", cls=cls).observe(step)
+        if att is not None:
+            # latency-attribution histograms (flight recorder fold): where
+            # each message's in-fabric time went, by QoS class
+            for name, v in att.components().items():
+                self.metrics.histogram(
+                    f"fabric.attr.{name}", cls=cls
+                ).observe(v)
 
     def class_arrive_stats(self, rank: int) -> Dict[int, Dict[str, float]]:
         """Per-QoS-class arrive-step percentiles of the messages recently
@@ -695,9 +815,14 @@ class Mailbox:
         self.fabric = fabric
         self.rank = rank
 
-    def send(self, dst: int, wire: bytes, list_level: int = 1) -> None:
-        """Queue a whole HGum wire for delivery to ``dst`` (routed, framed)."""
-        self.fabric.send(self.rank, dst, wire, list_level)
+    def send(self, dst: int, wire: bytes, list_level: int = 1,
+             request_id: Optional[int] = None) -> None:
+        """Queue a whole HGum wire for delivery to ``dst`` (routed, framed).
+
+        ``request_id`` tags the message with an obs.spans span id; the
+        receiver's Delivery carries it back (see :meth:`Fabric.send`)."""
+        self.fabric.send(self.rank, dst, wire, list_level,
+                         request_id=request_id)
 
     def recv(self) -> List[Delivery]:
         """Drain messages delivered to this rank (run ``exchange`` first)."""

@@ -115,7 +115,20 @@ from .frames import (
 #: on-device counter-block layout (import-pure, so no cycle): the scan
 #: carry accumulates one int32 vector per device and returns it alongside
 #: the delivered frames — the fused no-host-sync path stays sync-free.
-from ..obs.counters import ctr_index, global_index, n_counters
+#: The attribution layout (``ATT_*``/``n_att``) is the per-FRAME flight
+#: recorder: those columns ride WITH each frame through the link-buffer
+#: ppermutes instead of aggregating per device.
+from ..obs.counters import (
+    ATT_DEFECT,
+    ATT_ENTER,
+    ATT_STALL,
+    ATT_WAIT,
+    N_ATT_FIXED,
+    ctr_index,
+    global_index,
+    n_att,
+    n_counters,
+)
 
 #: shared validation rules — the static analyzer and the runtime raise the
 #: SAME messages (repro.analysis.rules is fabric-free at import time)
@@ -219,16 +232,17 @@ def _compact_to(valid: jnp.ndarray, cap: int, *cols):
     return out_valid, outs, overflow
 
 
-def _append(rx, rx_cnt, rx_step, ok, frames, take, step_no):
+def _append(rx, rx_cnt, rx_step, rx_att, ok, frames, take, step_no, att):
     """Append ``frames[take]`` rows to the rx buffer at ``rx_cnt``, recording
-    the scan step each row arrived at."""
+    the scan step each row arrived at and its attribution vector."""
     rx_cap = rx.shape[0]
     pos = jnp.where(take, rx_cnt + jnp.cumsum(take) - 1, rx_cap)
     rx = rx.at[pos].set(frames, mode="drop")
     rx_step = rx_step.at[pos].set(step_no, mode="drop")
+    rx_att = rx_att.at[pos].set(att, mode="drop")
     new_cnt = rx_cnt + jnp.sum(take)
     ok = ok & (new_cnt <= rx_cap)
-    return rx, jnp.minimum(new_cnt, rx_cap), rx_step, ok
+    return rx, jnp.minimum(new_cnt, rx_cap), rx_step, rx_att, ok
 
 
 class Router:
@@ -375,15 +389,18 @@ class Router:
         ``tx_valid`` ``(ranks, T)`` bool.  ``total_frames`` is an optional
         upper bound on valid frames across all ranks (default ``R*T``): the
         scan length derives from it, so a tight bound means fewer hop steps.
-        Returns ``(rx, rx_count, ok, crc_ok, rx_step, counters)``:
+        Returns ``(rx, rx_count, ok, crc_ok, rx_step, rx_att, counters)``:
         delivered frames per rank in arrival order, the per-rank count, a
         routing flag (False on undeliverable frames or buffer overflow —
         both indicate a misconfigured fabric), a CRC flag (False when a
         delivered frame fails its checksum), the scan step each frame
         arrived at (in-tick queueing latency: self-sends arrive at step 0,
-        each ppermute hop or credit stall adds one), and the per-rank
-        telemetry counter block (``repro.obs.counters`` layout),
-        accumulated device-side inside the scan.
+        each ppermute hop or credit stall adds one), the per-frame
+        attribution block (``repro.obs.counters`` ``ATT_*`` layout — the
+        flight recorder: ``wait + stall + sum(transit) == rx_step``
+        exactly, per frame), and the per-rank telemetry counter block
+        (``repro.obs.counters`` layout), all accumulated device-side
+        inside the scan.
         """
         R, T, W = tx.shape
         if R != self.n_ranks or W != self.config.frame_width:
@@ -428,7 +445,7 @@ class Router:
                 local,
                 mesh=self.mesh,
                 in_specs=(spec, spec),
-                out_specs=(spec, spec, spec, spec, spec, spec),
+                out_specs=(spec,) * 7,
                 check_rep=False,
             )
         )
@@ -474,26 +491,30 @@ class Router:
             spilled = rest & (jnp.cumsum(rest) <= spill)
             return take | spilled, jnp.sum(spilled, dtype=jnp.int32)
 
-        def hop(queue, take, axis, perm, extra=None):
+        K = n_att(len(axes))
+
+        def hop(queue, take, axis, perm, att, extra=None):
             """Scatter this direction's occupants into the link buffer and
-            move it one hop.  The valid flag — and, with defection, the
-            per-frame direction commitment — ride as trailing u32 columns
-            of the SAME buffer, so each direction costs exactly ONE
-            ppermute per step regardless of how much per-frame state
-            travels with the frames."""
+            move it one hop.  The valid flag, the per-frame attribution
+            vector, and — with defection — the direction commitment ride
+            as trailing u32 columns of the SAME buffer, so each direction
+            costs exactly ONE ppermute per step regardless of how much
+            per-frame state travels with the frames."""
             E = 2 if extra is not None else 1
             pos = jnp.where(take, jnp.cumsum(take) - 1, credits)
-            buf = jnp.pad(queue, ((0, 0), (0, E)))
+            buf = jnp.pad(queue, ((0, 0), (0, E + K)))
             buf = buf.at[:, W].set(take.astype(jnp.uint32))
             if extra is not None:
                 buf = buf.at[:, W + 1].set(extra.astype(jnp.uint32))
-            link = jnp.zeros((credits, W + E), jnp.uint32).at[pos].set(
+            buf = buf.at[:, W + E:].set(att.astype(jnp.uint32))
+            link = jnp.zeros((credits, W + E + K), jnp.uint32).at[pos].set(
                 buf, mode="drop"
             )
             arr = jax.lax.ppermute(link, axis, perm)
             avalid = arr[:, W] != 0
             adir = arr[:, W + 1].astype(jnp.int32) if extra is not None else None
-            return arr[:, :W], avalid, adir
+            aatt = arr[:, W + E:].astype(jnp.int32)
+            return arr[:, :W], avalid, adir, aatt
 
         NC = n_counters(len(axes))
         IDX_DELIVERED = global_index(len(axes), "delivered")
@@ -519,11 +540,22 @@ class Router:
             # so the fused and three-program paths — whose queue layouts
             # and static scan bounds differ — agree bit-for-bit.
             ctr = jnp.zeros((NC,), jnp.int32)
+            # per-frame flight recorder: one attribution vector per queue
+            # row, updated once per EXECUTED scan step.  At every step a
+            # live queued frame lands in exactly one of {hopped, stalled,
+            # waiting}, so per frame `wait + stall + sum(transit)` counts
+            # every step from 1 to its arrival — i.e. equals rx_step
+            # exactly, on either engine (the step schedules are identical
+            # under the default early-exit scans).
+            qatt = jnp.zeros((q_cap, K), jnp.int32)
+            rx_att = jnp.zeros((rx_cap, K), jnp.int32)
 
-            # self-sends never cross a link: deliver them up front
+            # self-sends never cross a link: deliver them up front (step 0,
+            # all attribution components zero)
             self_take = qvalid & (route_dst(queue) == me)
-            rx, rx_cnt, rx_step, ok = _append(
-                rx, rx_cnt, rx_step, ok, queue, self_take, step_no
+            rx, rx_cnt, rx_step, rx_att, ok = _append(
+                rx, rx_cnt, rx_step, rx_att, ok, queue, self_take, step_no,
+                qatt,
             )
             ctr = ctr.at[IDX_DELIVERED].add(
                 jnp.sum(self_take, dtype=jnp.int32)
@@ -572,16 +604,17 @@ class Router:
                          use_bwd=use_bwd, fwd_perm=fwd_perm,
                          bwd_perm=bwd_perm, defect=defect,
                          ix_f=ix_f, ix_b=ix_b):
-                    # new carry state (qsrc, ctr) rides at the END of the
-                    # tuple so `more_of`'s positional reads stay valid
+                    # new carry state (qsrc, ctr, qatt, rx_att) rides at
+                    # the END of the tuple so `more_of`'s positional reads
+                    # stay valid
                     if defect:
                         (queue, qdst, qlvl, qadp, qdir, qvalid,
                          rx, rx_cnt, rx_step, ok, step_no, sf, sb,
-                         qsrc, ctr) = carry
+                         qsrc, ctr, qatt, rx_att) = carry
                     else:
                         (queue, qdst, qlvl, qadp, qvalid,
                          rx, rx_cnt, rx_step, ok, step_no,
-                         qsrc, ctr) = carry
+                         qsrc, ctr, qatt, rx_att) = carry
                     step_no = step_no + 1
 
                     def count(take):
@@ -676,34 +709,70 @@ class Router:
                             jnp.any(el_b).astype(jnp.int32))
                         ctr = ctr.at[ix_b["starved"]].add(
                             jnp.any(el_b & ~take_b).astype(jnp.int32))
-                    arrs, avalids, adirs = [], [], []
+                    # flight-recorder update — BEFORE the hops, against the
+                    # step-start qvalid, so a taken frame's vector already
+                    # includes this step's transit when it rides the link.
+                    # The three predicates are disjoint and cover every
+                    # live queued frame: taken (one hop on this axis),
+                    # eligible-but-left-waiting (credit/QoS stall), or
+                    # valid-but-off-axis (ingress/phase queue wait).
+                    taken = jnp.zeros_like(qvalid)
+                    if use_fwd:
+                        taken = taken | take_f
+                    if use_bwd:
+                        taken = taken | take_b
+                    enter = qatt[:, ATT_ENTER]
+                    qatt = qatt.at[:, ATT_ENTER].set(
+                        jnp.where(taken & (enter == 0), step_no, enter)
+                    )
+                    qatt = qatt.at[:, N_ATT_FIXED + ai].add(
+                        taken.astype(jnp.int32)
+                    )
+                    qatt = qatt.at[:, ATT_STALL].add(
+                        (elig & ~taken).astype(jnp.int32)
+                    )
+                    qatt = qatt.at[:, ATT_WAIT].add(
+                        (qvalid & ~elig).astype(jnp.int32)
+                    )
+                    if defect:
+                        qatt = qatt.at[:, ATT_DEFECT].add(
+                            (extra_b | extra_f).astype(jnp.int32)
+                        )
+                    arrs, avalids, adirs, aatts = [], [], [], []
                     ex = qdir if defect else None
                     if use_fwd:
-                        arr_f, av_f, ad_f = hop(queue, take_f, axis,
-                                                fwd_perm, extra=ex)
+                        arr_f, av_f, ad_f, aa_f = hop(queue, take_f, axis,
+                                                      fwd_perm, qatt,
+                                                      extra=ex)
                         qvalid = qvalid & ~take_f
                         arrs.append(arr_f)
                         avalids.append(av_f)
                         adirs.append(ad_f)
+                        aatts.append(aa_f)
                     if use_bwd:
-                        arr_b, av_b, ad_b = hop(queue, take_b, axis,
-                                                bwd_perm, extra=ex)
+                        arr_b, av_b, ad_b, aa_b = hop(queue, take_b, axis,
+                                                      bwd_perm, qatt,
+                                                      extra=ex)
                         qvalid = qvalid & ~take_b
                         arrs.append(arr_b)
                         avalids.append(av_b)
                         adirs.append(ad_b)
+                        aatts.append(aa_b)
                     arr = jnp.concatenate(arrs)
                     avalid = jnp.concatenate(avalids)
+                    aatt = jnp.concatenate(aatts)
                     # deliver frames that reached their full destination
                     done = avalid & (route_dst(arr) == me)
-                    rx, rx_cnt, rx_step, ok = _append(
-                        rx, rx_cnt, rx_step, ok, arr, done, step_no
+                    rx, rx_cnt, rx_step, rx_att, ok = _append(
+                        rx, rx_cnt, rx_step, rx_att, ok, arr, done, step_no,
+                        aatt,
                     )
                     ctr = ctr.at[IDX_DELIVERED].add(count(done))
                     # transit frames re-queue at the FRONT (FIFO per path);
                     # the hoisted columns ride the same stable partition
                     cvalid = jnp.concatenate([avalid & ~done, qvalid])
                     comb = jnp.concatenate([arr, queue])
+                    catt = jnp.concatenate([aatt, qatt])
                     cdst = jnp.concatenate([
                         self._coord(route_dst(arr), ai).astype(jnp.int32),
                         qdst,
@@ -716,29 +785,32 @@ class Router:
                     ])
                     if defect:
                         cdir = jnp.concatenate([jnp.concatenate(adirs), qdir])
-                        qvalid, (queue, qdst, qlvl, qadp, qdir, qsrc), over = \
+                        qvalid, (queue, qdst, qlvl, qadp, qdir, qsrc,
+                                 qatt), over = \
                             _compact_to(cvalid, q_cap, comb, cdst, clvl,
-                                        cadp, cdir, csrc)
+                                        cadp, cdir, csrc, catt)
                         ok = ok & ~over
                         return (queue, qdst, qlvl, qadp, qdir, qvalid,
                                 rx, rx_cnt, rx_step, ok, step_no, sf, sb,
-                                qsrc, ctr)
-                    qvalid, (queue, qdst, qlvl, qadp, qsrc), over = \
+                                qsrc, ctr, qatt, rx_att)
+                    qvalid, (queue, qdst, qlvl, qadp, qsrc, qatt), over = \
                         _compact_to(cvalid, q_cap, comb, cdst, clvl, cadp,
-                                    csrc)
+                                    csrc, catt)
                     ok = ok & ~over
                     return (queue, qdst, qlvl, qadp, qvalid,
                             rx, rx_cnt, rx_step, ok, step_no,
-                            qsrc, ctr)
+                            qsrc, ctr, qatt, rx_att)
 
                 if defect:
                     init = (queue, qdst, qlvl, qadp,
                             jnp.zeros((q_cap,), jnp.int32), qvalid,
                             rx, rx_cnt, rx_step, ok, step_no,
-                            jnp.int32(0), jnp.int32(0), qsrc, ctr)
+                            jnp.int32(0), jnp.int32(0), qsrc, ctr,
+                            qatt, rx_att)
                 else:
                     init = (queue, qdst, qlvl, qadp, qvalid,
-                            rx, rx_cnt, rx_step, ok, step_no, qsrc, ctr)
+                            rx, rx_cnt, rx_step, ok, step_no, qsrc, ctr,
+                            qatt, rx_att)
 
                 if cfg.early_exit:
                     # stop as soon as no device anywhere still holds a frame
@@ -774,10 +846,12 @@ class Router:
                     )
                 if defect:
                     (queue, qdst, qlvl, qadp, _, qvalid,
-                     rx, rx_cnt, rx_step, ok, step_no, _, _, _, ctr) = out
+                     rx, rx_cnt, rx_step, ok, step_no, _, _, _, ctr,
+                     qatt, rx_att) = out
                 else:
                     (queue, qdst, qlvl, qadp, qvalid,
-                     rx, rx_cnt, rx_step, ok, step_no, _, ctr) = out
+                     rx, rx_cnt, rx_step, ok, step_no, _, ctr,
+                     qatt, rx_att) = out
 
             # anything still queued is undeliverable (bad dst / starved link)
             ok = ok & ~jnp.any(qvalid)
@@ -788,7 +862,7 @@ class Router:
                 jnp.sum(live & ~frame_crc, dtype=jnp.int32)
             )
             return (rx[None], rx_cnt[None], ok[None], crc_ok[None],
-                    rx_step[None], ctr[None])
+                    rx_step[None], rx_att[None], ctr[None])
 
         return local
 
@@ -812,9 +886,11 @@ class Router:
         themselves.
 
         Returns device arrays ``(rx_hdr (R, cap, HDR_WORDS), rx_pay
-        (R, cap, frame_words), rx_cnt, ok, crc_ok, rx_step, counters)``
-        (``counters`` in the ``repro.obs.counters`` layout); the caller
-        materializes host bytes only at reassembly time (``Mailbox.recv``).
+        (R, cap, frame_words), rx_cnt, ok, crc_ok, rx_step, rx_att,
+        counters)`` (``rx_att`` per-frame in the ``ATT_*`` layout,
+        ``counters`` per-rank in the ``repro.obs.counters`` layout); the
+        caller materializes host bytes only at reassembly time
+        (``Mailbox.recv``).
         """
         key = (payloads.shape[1], payloads.shape[2], axis_steps, total)
         fn = self._fused.get(key)
@@ -865,12 +941,14 @@ class Router:
             tx_valid = (
                 svalid[0][:, None] & (fidx < n_live[:, None])
             ).reshape(1, T)
-            rx, rx_cnt, ok, crc_ok, rx_step, ctr = route_local(tx, tx_valid)
+            rx, rx_cnt, ok, crc_ok, rx_step, rx_att, ctr = route_local(
+                tx, tx_valid
+            )
             # RX split, per-device (slicing — bit-identical to the Pallas
             # ``unpack_frames_batch`` twin used by the three-program path)
             return (
                 rx[:, :, :HDR_WORDS], rx[:, :, HDR_WORDS:],
-                rx_cnt, ok, crc_ok, rx_step, ctr,
+                rx_cnt, ok, crc_ok, rx_step, rx_att, ctr,
             )
 
         spec = P(self.axis_names)
@@ -879,7 +957,7 @@ class Router:
                 local,
                 mesh=self.mesh,
                 in_specs=(spec,) * 5,
-                out_specs=(spec,) * 7,
+                out_specs=(spec,) * 8,
                 check_rep=False,
             )
         )

@@ -329,6 +329,8 @@ def serve_requests_sharded(
     routing: str = "shortest",
     defect_after: int = 0,
     analyze: bool = False,
+    metrics=None,
+    trace=None,
 ) -> List[bytes]:
     """Answer N request wires across fabric-connected serving shards.
 
@@ -357,6 +359,10 @@ def serve_requests_sharded(
             params, cfg, wires, max_new=max_new, pad_to=pad_to,
             slots=slots, admit_cap=admit_cap,
         )
+    if metrics is not None:
+        fabric.metrics = metrics
+    if trace is not None:
+        fabric.trace = trace
     if analyze:
         _analyze_serve(fabric, len(wires), "serve_requests_sharded")
     shards = list(range(1, fabric.n_ranks))
@@ -400,6 +406,10 @@ def serve_requests_sharded(
         s = placement[i]
         out.append(per_shard[s][cursor[s]])
         cursor[s] += 1
+    if metrics is not None:
+        metrics.gauge("fabric.load_drift.entries").set(
+            len(fabric.load_drift())
+        )
     return out
 
 
@@ -432,6 +442,7 @@ def serve_requests_streaming(
     analyze: bool = False,
     metrics=None,
     trace=None,
+    spans=None,
 ) -> List[bytes]:
     """Answer N request wires with token-level streamed responses.
 
@@ -490,8 +501,13 @@ def serve_requests_streaming(
     — and is shared with the fabric, the batchers, the lanes, and the
     reader, so one ``snapshot()`` covers the whole stack.  ``trace`` (an
     ``obs.trace.TraceRecorder``) records the tick/chunk/recompile
-    timeline.  Both are observation-only: tokens and final wires are
-    byte-identical with or without them (property-tested).
+    timeline.  ``spans`` (an ``obs.spans.SpanTracker``; auto-created when
+    a ``trace`` is given) mints one request id per request wire at
+    ingress and follows it through mailbox deliveries, batcher
+    admit/evict, lane first-flush and first-token — the end-to-end causal
+    arc the attribution report breaks down.  All three are
+    observation-only: tokens and final wires are byte-identical with or
+    without them (property-tested).
     """
     from ..stream import ChunkLane, StreamReader
 
@@ -507,6 +523,13 @@ def serve_requests_streaming(
         fabric.metrics = metrics  # one registry across the whole stack
     if trace is not None:
         fabric.trace = trace
+        if spans is None:
+            from ..obs import SpanTracker
+
+            spans = SpanTracker(trace)
+    if spans is not None:
+        fabric.spans = spans  # deliveries correlate back to request ids
+        spans.set_tick(0)
     if analyze:
         _analyze_serve(fabric, len(wires), "serve_requests_streaming")
     shards = list(range(1, fabric.n_ranks))
@@ -522,9 +545,17 @@ def serve_requests_streaming(
         )
     levels = list(qos_levels) if qos_levels is not None else [1] * len(wires)
 
-    # ingress -> shards: route the raw request wires
+    # ingress -> shards: mint one span per request at tick 0 and route the
+    # raw request wires, each tagged with its request id so every fabric
+    # delivery it causes correlates back to the span
+    rid_of: List[Optional[int]] = [None] * len(wires)
     for i, w in enumerate(wires):
-        ingress.send(placement[i], w, list_level=levels[i])
+        if spans is not None:
+            rid_of[i] = spans.start("request", req=i, cls=levels[i],
+                                    shard=placement[i])
+            spans.event(rid_of[i], "serve.ingress", shard=placement[i])
+        ingress.send(placement[i], w, list_level=levels[i],
+                     request_id=rid_of[i])
     fabric.exchange()
 
     # shard setup: per-shard batcher + per-sequence stream writers.  The
@@ -539,6 +570,8 @@ def serve_requests_streaming(
     lanes: Dict[Tuple[int, int], ChunkLane] = {}
     writers: Dict[Tuple[int, int, int], object] = {}
     expected = []  # (src shard, stream_id) keys the reader must close
+    reader = StreamReader(metrics=metrics, spans=spans)
+    open_streams: Dict[int, int] = {}  # rid -> streams not yet at EOS
     for s in shards:
         box = fabric.mailbox(s)
         arrived = box.recv()
@@ -548,7 +581,8 @@ def serve_requests_streaming(
         if bad:
             raise RuntimeError(f"shard {s}: corrupt request frames from {bad}")
         local_reqs = decode_request_batch([d.wire for d in arrived])
-        batcher = ContinuousBatcher(params, cfg, sched, metrics=metrics)
+        batcher = ContinuousBatcher(params, cfg, sched, metrics=metrics,
+                                    spans=spans)
         batchers[s] = batcher
         for k, (_, prompts) in enumerate(local_reqs):
             lvl = levels[globals_of[s][k]]
@@ -560,14 +594,23 @@ def serve_requests_streaming(
                           max_hold=backpressure_hold,
                           metrics=metrics),
             )
+            lane.spans = spans
+            # correlate the shard-local stream ids back to the request's
+            # span: the k-th delivery at shard s IS the k-th request
+            # placed on s (per-source FIFO), carrying its request_id
+            rid = arrived[k].request_id if spans is not None else None
             for j, p in enumerate(prompts):
                 batcher.submit((k, j), p)
                 sid = (k << 16) | j
                 writers[(s, k, j)] = lane.writer(sid)
                 expected.append((s, sid))
+                if rid is not None:
+                    batcher.span_of[(k, j)] = rid
+                    lane.span_ids[sid] = rid
+                    reader.span_ids[(s, sid)] = rid
+                    open_streams[rid] = open_streams.get(rid, 0) + 1
 
     # the streamed tick pipeline
-    reader = StreamReader(metrics=metrics)
     t_serve0 = time.perf_counter()
     seen_first: set = set()  # stream keys that produced their first token
     tok_count = [0, 0]  # [total tokens arrived, tokens this tick]
@@ -580,13 +623,21 @@ def serve_requests_streaming(
                 )
             tok_count[0] += len(ev.tokens)
             tok_count[1] += len(ev.tokens)
-            if metrics is not None and ev.tokens:
-                key = (ev.src, ev.stream_id)
-                if key not in seen_first:
-                    seen_first.add(key)
-                    ttft = time.perf_counter() - t_serve0
+            key = (ev.src, ev.stream_id)
+            if ev.tokens and key not in seen_first:
+                seen_first.add(key)
+                ttft = time.perf_counter() - t_serve0
+                if metrics is not None:
                     metrics.histogram("serve.ttft_s", base=0.001).observe(ttft)
                     metrics.series("serve.ttft_s.series").append(ttft)
+                if spans is not None and key in reader.span_ids:
+                    spans.event(reader.span_ids[key], "serve.first_token",
+                                ttft_s=ttft)
+            if ev.eos and spans is not None and key in reader.span_ids:
+                rid = reader.span_ids[key]
+                open_streams[rid] = open_streams.get(rid, 1) - 1
+                if open_streams[rid] <= 0:
+                    spans.finish(rid)
             if trace is not None:
                 trace.instant(
                     "stream.chunk", cat="stream", pid=ev.src,
@@ -622,9 +673,13 @@ def serve_requests_streaming(
                 st = per_class.get(lane.list_level)
                 lane.feedback(st["p95"] if st else None)
 
+    tick = 0
     while any(b.pending or b.n_active for b in batchers.values()):
         t_tick0 = trace.now_us() if trace is not None else 0.0
         tok_count[1] = 0
+        tick += 1
+        if spans is not None:
+            spans.set_tick(tick)  # ingress was tick 0; the loop is 1..N
         for b in batchers.values():
             b.step_begin()  # dispatch compute; device runs in background
         if overlap:
@@ -654,6 +709,9 @@ def serve_requests_streaming(
     for _ in range(3):
         if reader.all_eos(expected):
             break
+        tick += 1
+        if spans is not None:
+            spans.set_tick(tick)
         fabric.exchange()
         _pump()
     if not reader.all_eos(expected):
@@ -662,6 +720,9 @@ def serve_requests_streaming(
         dt = max(time.perf_counter() - t_serve0, 1e-9)
         metrics.gauge("serve.tokens_per_s").set(tok_count[0] / dt)
         metrics.counter("serve.tokens").add(tok_count[0])
+        metrics.gauge("fabric.load_drift.entries").set(
+            len(fabric.load_drift())
+        )
 
     # final wires from the streamed tokens — same bulk SER as the batched
     # plane, so the result is byte-identical to serve_requests
@@ -720,16 +781,27 @@ def main() -> None:
                     help="write a Chrome-trace JSON timeline of ticks, "
                          "chunk arrivals and recompiles (load in "
                          "chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--attribution-json", default=None, metavar="PATH",
+                    help="for --streaming: write the per-request span "
+                         "export (latency attribution + degradation) as "
+                         "JSON; render with `python -m repro.obs "
+                         "attribution PATH`")
+    ap.add_argument("--slo", default=None, metavar="SPEC",
+                    help="evaluate SLO targets against the run's metrics "
+                         "('k=v,k=v' inline or a JSON file; see "
+                         "repro.obs.slo) and exit 1 on any violation")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    metrics = trace = None
-    if args.metrics_json or args.trace_out:
-        from ..obs import MetricsRegistry, TraceRecorder
+    metrics = trace = spans = None
+    if args.metrics_json or args.trace_out or args.slo or args.attribution_json:
+        from ..obs import MetricsRegistry, SpanTracker, TraceRecorder
 
         metrics = MetricsRegistry()
         if args.trace_out:
             trace = TraceRecorder()
+        if args.attribution_json or args.trace_out:
+            spans = SpanTracker(trace)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -763,6 +835,7 @@ def main() -> None:
             backpressure_p95=args.backpressure_p95,
             metrics=metrics,
             trace=trace,
+            spans=spans,
             on_token=lambda m, j, step, tok: first_tok_t.append(time.time())
             if not first_tok_t else None,
         )
@@ -771,6 +844,7 @@ def main() -> None:
             params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
             slots=args.slots, n_shards=args.n_shards, routing=args.routing,
             defect_after=args.defect_after,
+            metrics=metrics, trace=trace,
         )
     else:
         resp_wires = serve_requests(
@@ -807,9 +881,25 @@ def main() -> None:
         trace.save(args.trace_out)
         print(f"[serve] trace timeline -> {args.trace_out} "
               f"({len(trace.events)} events)")
+    if args.attribution_json and spans is not None:
+        import json as _json
+
+        export = spans.export()
+        with open(args.attribution_json, "w") as f:
+            _json.dump(export, f, indent=1)
+            f.write("\n")
+        print(f"[serve] attribution export -> {args.attribution_json} "
+              f"({len(export['requests'])} request span(s))")
     rid, outs = decode_response(resp_wires[0])
     for i, o in enumerate(outs[:2]):
         print(f"  req {rid} out[{i}][:8] = {o[:8]}")
+    if args.slo and metrics is not None:
+        from ..obs import evaluate_slo
+
+        rep = evaluate_slo(args.slo, snapshot=metrics.snapshot())
+        print(rep.render_text())
+        if not rep.ok:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ scope) so the router can depend on it without cycles.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple
 
 #: per-(axis, direction) counter fields, in slot order
@@ -88,6 +89,92 @@ def counters_to_dict(axis_names: Sequence[str],
     for field in CTR_GLOBALS:
         out[field] = int(ctr[global_index(n_axes, field)])
     return out
+
+
+# ---------------------------------------------------------------------------
+# Per-frame attribution columns (the flight recorder)
+#
+# Where the counter block above aggregates *events per device*, the
+# attribution block rides WITH each frame through the link-buffer
+# ppermute: ``n_att(n_axes)`` int32 columns appended to the frame's
+# queue-side state, updated once per executed scan step, delivered
+# alongside the frame.  Layout::
+#
+#     [enter_step, stall, wait, defections, transit axis 0, transit axis 1, ...]
+#
+# * ``enter_step`` — the 1-based ``step_no`` of the frame's FIRST hop
+#   (0 == never hopped, i.e. a self-send delivered before the scan).
+# * ``stall``     — steps the frame was eligible on the active axis but
+#   left waiting by credits/QoS (starvation, the defection trigger).
+# * ``wait``      — steps the frame sat queued but NOT eligible on the
+#   active axis (ingress queue wait: wrong-axis phase or already home).
+# * ``defections``— times the frame defected to the opposite direction.
+# * ``transit[ai]`` — hops the frame took on axis ``ai``.
+#
+# At every executed step a live queued frame lands in exactly one of
+# {hopped, stalled, waiting}, so the per-frame invariant
+# ``wait + stall + sum(transit) == arrive_step`` holds EXACTLY, and —
+# because the updates are per-event like ``occupied`` — bit-identically
+# across the fused and three-program engines.
+
+#: fixed attribution slots, before the per-axis transit block
+ATT_FIELDS: Tuple[str, ...] = ("enter_step", "stall", "wait", "defections")
+ATT_ENTER, ATT_STALL, ATT_WAIT, ATT_DEFECT = 0, 1, 2, 3
+N_ATT_FIXED = len(ATT_FIELDS)
+
+
+def n_att(n_axes: int) -> int:
+    """Width of one frame's attribution vector."""
+    return N_ATT_FIXED + n_axes
+
+
+def att_transit_index(ai: int) -> int:
+    """Column of axis ``ai``'s transit (hop) count."""
+    return N_ATT_FIXED + ai
+
+
+@dataclass(frozen=True)
+class FrameAttribution:
+    """Host-side view of one delivered frame's attribution vector.
+
+    ``queue_wait + stall + total_transit == arrive_step`` exactly, on
+    every engine and routing mode (property-tested).  For a multi-frame
+    message the :class:`~repro.fabric.mailbox.Delivery` carries the
+    attribution of its *critical* frame — the one that arrived last."""
+
+    enter_step: int = 0
+    stall: int = 0
+    wait: int = 0
+    defections: int = 0
+    transit: Tuple[int, ...] = field(default_factory=tuple)
+
+    @property
+    def total_transit(self) -> int:
+        return sum(self.transit)
+
+    @property
+    def arrive_step(self) -> int:
+        """The reconstructed arrival step (== ``Delivery.arrive_step``)."""
+        return self.wait + self.stall + self.total_transit
+
+    def components(self) -> Dict[str, int]:
+        """Flat dict for reports: queue_wait / stall / transit / defections."""
+        return {
+            "queue_wait": self.wait,
+            "stall": self.stall,
+            "transit": self.total_transit,
+            "defections": self.defections,
+        }
+
+    @classmethod
+    def from_vector(cls, n_axes: int, vec: Sequence[int]) -> "FrameAttribution":
+        return cls(
+            enter_step=int(vec[ATT_ENTER]),
+            stall=int(vec[ATT_STALL]),
+            wait=int(vec[ATT_WAIT]),
+            defections=int(vec[ATT_DEFECT]),
+            transit=tuple(int(vec[att_transit_index(a)]) for a in range(n_axes)),
+        )
 
 
 def observed_link_loads(

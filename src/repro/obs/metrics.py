@@ -72,6 +72,43 @@ def window_stats(steps: Iterable[float]) -> Dict[str, float]:
     }
 
 
+def quantile_from_buckets(
+    base: float, buckets: List[int], count: int,
+    vmin: Optional[float], vmax: Optional[float], q: float,
+) -> Optional[float]:
+    """Quantile estimate over a log2-bucket vector with within-bucket
+    linear interpolation — the shared math behind
+    :meth:`Histogram.quantile` and ``obs.report``'s snapshot diffs.
+
+    The CEIL rank convention matches :func:`window_stats` (the smallest
+    value with ``>= q`` of the mass at or below it); the hit bucket's
+    span ``(lo, hi]`` is interpolated by the rank's position inside the
+    bucket and the result is clamped to the exact observed ``[min,
+    max]`` (so a one-sample histogram reports that sample, not a bucket
+    edge).  Returns None on an empty histogram."""
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile q must be in [0, 1], got {q}")
+    if count <= 0:
+        return None
+    rank = q * count
+    cum = 0
+    for i, c in enumerate(buckets):
+        if c > 0 and cum + c >= rank:
+            lo = 0.0 if i == 0 else base * (1 << (i - 1))
+            hi = base * (1 << i)
+            if i == len(buckets) - 1 and vmax is not None:
+                hi = max(vmax, lo)  # overflow bucket: cap at observed max
+            frac = min(1.0, max(0.0, (rank - cum) / c))
+            v = lo + frac * (hi - lo)
+            if vmin is not None:
+                v = max(v, vmin)
+            if vmax is not None:
+                v = min(v, vmax)
+            return v
+        cum += c
+    return vmax
+
+
 class ClassWindows:
     """Per-class bounded traces of latency samples with shared stats.
 
@@ -171,6 +208,14 @@ class Histogram:
     def bounds(self) -> List[float]:
         """Upper bound of each bucket (the last is open / +inf)."""
         return [self.base * (1 << i) for i in range(len(self.buckets))]
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Quantile estimate with within-bucket linear interpolation,
+        clamped to the exact observed [min, max] (see
+        :func:`quantile_from_buckets`).  None when empty."""
+        return quantile_from_buckets(
+            self.base, self.buckets, self.count, self.min, self.max, q
+        )
 
     def _snap(self) -> dict:
         return {

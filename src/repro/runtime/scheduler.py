@@ -102,7 +102,7 @@ class ContinuousBatcher:
     """Admit/decode/evict loop over a fixed-slot KV cache."""
 
     def __init__(self, params: PyTree, cfg: ModelConfig,
-                 sched: SchedulerConfig, metrics=None):
+                 sched: SchedulerConfig, metrics=None, spans=None):
         from ..launch.steps import cached_serve_steps
 
         self.params = params
@@ -111,6 +111,10 @@ class ContinuousBatcher:
         #: optional obs.metrics.MetricsRegistry (admit/evict counters,
         #: occupancy + queue-depth gauges); None = no-op telemetry
         self.metrics = metrics
+        #: optional obs.spans.SpanTracker; seq_ids with an entry in
+        #: :attr:`span_of` get "batcher.admit"/"batcher.evict" arc points
+        self.spans = spans
+        self.span_of: Dict[Hashable, int] = {}
         self.prefill_step, self.decode_step = cached_serve_steps(
             cfg, cache_len=sched.cache_len
         )
@@ -189,6 +193,9 @@ class ContinuousBatcher:
             seq.remaining = self.sched.max_new - 1
             self.active[free[j]] = seq
             self._tick_emit.append((seq.seq_id, 0, int(first[j])))
+            if self.spans is not None and seq.seq_id in self.span_of:
+                self.spans.event(self.span_of[seq.seq_id], "batcher.admit",
+                                 slot=free[j])
         if self.metrics is not None:
             self.metrics.counter("batcher.admitted").add(take)
         self._evict()
@@ -200,6 +207,9 @@ class ContinuousBatcher:
                 self.done[seq.seq_id] = seq.out
                 self.active[i] = None
                 evicted += 1
+                if self.spans is not None and seq.seq_id in self.span_of:
+                    self.spans.event(self.span_of[seq.seq_id],
+                                     "batcher.evict", n_out=len(seq.out))
         if self.metrics is not None and evicted:
             self.metrics.counter("batcher.evicted").add(evicted)
 

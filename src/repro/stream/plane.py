@@ -130,6 +130,12 @@ class ChunkLane:
         #: (the no-telemetry path must exist so serve output can be
         #: asserted byte-identical with and without a registry attached)
         self.metrics = metrics
+        #: optional obs.spans.SpanTracker + stream_id -> request id map;
+        #: a stream's step-0 chunk riding a burst marks the span's
+        #: "stream.first_flush" tick (held chunks mark when they SHIP,
+        #: not when they queue — the clamp delay is part of the latency)
+        self.spans = None
+        self.span_ids: Dict[int, int] = {}
 
     def _counter(self, name: str):
         if self.metrics is None:
@@ -193,6 +199,12 @@ class ChunkLane:
             self.dst, encode_chunk_burst(chunks), list_level=self.list_level
         )
         self.flushes += 1
+        if self.spans is not None:
+            for c in chunks:
+                if c.step == 0 and c.stream_id in self.span_ids:
+                    self.spans.event(self.span_ids[c.stream_id],
+                                     "stream.first_flush", dst=self.dst,
+                                     level=self.list_level)
         self._note_flush(len(chunks), held_before)
         return len(chunks)
 
@@ -229,13 +241,18 @@ class StreamState:
 class StreamReader:
     """Demultiplexes chunk bursts into per-stream token sequences."""
 
-    def __init__(self, metrics=None) -> None:
+    def __init__(self, metrics=None, spans=None) -> None:
         self.streams: Dict[Tuple[int, int], StreamState] = {}
         #: deliveries whose bursts yielded no parseable chunk at all —
         #: corruption that cannot be attributed to a stream
         self.unattributed: List = []
         #: optional obs.metrics.MetricsRegistry; None = no-op telemetry
         self.metrics = metrics
+        #: optional obs.spans.SpanTracker + (src, stream_id) -> request id
+        #: map; a stream turning corrupt degrades its request's span with
+        #: the reason, an unattributable burst records a tracker anomaly
+        self.spans = spans
+        self.span_ids: Dict[Tuple[int, int], int] = {}
 
     def feed(self, deliveries: Iterable) -> List[StreamEvent]:
         """Consume fabric deliveries; returns the fresh stream events."""
@@ -249,6 +266,11 @@ class StreamReader:
                     self.unattributed.append(d)
                     if m is not None:
                         m.counter("stream.reader.unattributed").add(1)
+                    if self.spans is not None:
+                        self.spans.anomaly(
+                            "stream.reader.unattributed", src=d.src,
+                            level=d.list_level,
+                            request_id=getattr(d, "request_id", None))
                 continue
             arrive = getattr(d, "arrive_step", None)
             for c in chunks:
@@ -256,10 +278,18 @@ class StreamReader:
                 st = self.streams.setdefault(key, StreamState())
                 st.level = d.list_level
                 was_ok = st.ok
+                reasons = []
                 if not clean:
                     st.ok = False  # CRC/parse failure poisons this stream
+                    reasons.append("crc")
                 if c.step != st.next_step or st.eos:
                     st.ok = False  # lost, duplicated, or post-EOS chunk
+                    reasons.append("chunk-gap")
+                if (reasons and self.spans is not None
+                        and key in self.span_ids):
+                    self.spans.degrade(self.span_ids[key],
+                                       ",".join(reasons), src=d.src,
+                                       stream_id=c.stream_id, step=c.step)
                 st.next_step = c.step + 1
                 st.tokens.extend(c.tokens)
                 st.eos = st.eos or c.eos

@@ -377,6 +377,164 @@ def test_streaming_serve_telemetry_is_byte_invisible(serve_setup):
     assert "serve.tick" in ev_names and "stream.chunk" in ev_names
 
 
+# ---------------------------------------------------------------------------
+# satellites: histogram quantiles, snapshot diff, SLO gates, CLI
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_quantile_pinned_against_exact_samples():
+    """Interpolated log2-bucket quantiles vs exact-sample references:
+    within one bucket width of the true value, exact at the extremes."""
+    import math
+
+    from repro.obs import Histogram
+
+    h = Histogram(base=1.0, n_buckets=16)
+    samples = [float(v) for v in range(1, 11)]  # 1..10
+    for v in samples:
+        h.observe(v)
+    assert h.quantile(0.0) == 1.0  # clamps to observed min
+    assert h.quantile(1.0) == 10.0  # ...and max
+    assert h.quantile(0.5) == 5.0  # pinned: ceil-rank 5 lands mid-bucket
+    for q in (0.25, 0.75, 0.9, 0.95):
+        exact = samples[min(len(samples) - 1,
+                            max(0, math.ceil(q * len(samples)) - 1))]
+        got = h.quantile(q)
+        lo, hi = 2 ** (math.floor(math.log2(exact))), \
+            2 ** (math.ceil(math.log2(exact)) or 1)
+        assert lo / 2 <= got <= hi * 2, (q, exact, got)
+    assert Histogram().quantile(0.5) is None  # empty -> None
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_quantile_from_buckets_interpolation_and_overflow():
+    from repro.obs import quantile_from_buckets
+
+    # one bucket (1, 2], 4 samples: rank interpolates within the bucket
+    assert quantile_from_buckets(1.0, [0, 4], 4, 1.2, 2.0, 0.5) == \
+        pytest.approx(1.5)
+    # overflow bucket is capped at the observed max, not 2^n
+    v = quantile_from_buckets(1.0, [0, 0, 10], 10, 3.0, 6.0, 0.99)
+    assert v is not None and v <= 6.0
+
+
+def test_diff_snapshots_structure_and_render():
+    from repro.obs import diff_snapshots, render_diff
+
+    a = MetricsRegistry()
+    a.counter("x").add(2)
+    a.counter("gone").add(1)
+    b = MetricsRegistry()
+    b.counter("x").add(3)
+    b.gauge("new.g").set(7)
+    d = diff_snapshots(a.snapshot(), b.snapshot())
+    assert list(d["added"]) == ["new.g"] and list(d["removed"]) == ["gone"]
+    assert d["changed"]["x"]["delta"] == 1
+    assert d["changed"]["x"]["ratio"] == pytest.approx(1.5)
+    text = render_diff(d)
+    assert "+ new.g" in text and "- gone" in text and "~ x" in text
+    same = diff_snapshots(a.snapshot(), a.snapshot())
+    assert not (same["added"] or same["removed"] or same["changed"])
+    assert "snapshots agree" in render_diff(same)
+
+
+def test_evaluate_slo_pass_fail_burn_and_missing_signal():
+    from repro.obs import evaluate_slo
+
+    m = MetricsRegistry()
+    for v in (0.1, 0.2, 0.3, 0.4):
+        m.series("serve.ttft_s.series").append(v)
+    m.gauge("serve.tokens_per_s").set(50.0)
+    m.gauge("fabric.load_drift.entries").set(0)
+    snap = m.snapshot()
+    rep = evaluate_slo("ttft_p95_s=0.5,tokens_per_s_min=10,drift_free",
+                       snapshot=snap)
+    assert rep.ok and not rep.violations()
+    by = {r.name: r for r in rep.results}
+    assert by["ttft_p95_s"].observed == pytest.approx(0.4)  # ceil-rank p95
+    assert by["ttft_p95_s"].burn_rate == pytest.approx(0.8)
+    assert by["tokens_per_s_min"].burn_rate == pytest.approx(0.2)
+    # violation: burn > 1 and ok=False; missing signal FAILS, never passes
+    rep2 = evaluate_slo({"ttft_p95_s": 0.2, "max:absent.metric": 1},
+                        snapshot=snap)
+    assert not rep2.ok
+    by2 = {r.name: r for r in rep2.results}
+    assert by2["ttft_p95_s"].burn_rate == pytest.approx(2.0)
+    assert by2["max:absent.metric"].observed is None
+    assert "VIOLATED" in rep2.render_text()
+    # generic flat-key bounds work on plain values dicts (bench metrics)
+    rep3 = evaluate_slo("min:fabric.smoke_frames_per_s=10",
+                        values={"fabric.smoke_frames_per_s": 100.0})
+    assert rep3.ok
+    # unknown objectives fail loudly with a hint
+    assert not evaluate_slo({"not_a_thing": 1}, snapshot=snap).ok
+
+
+def test_parse_slo_forms(tmp_path):
+    from repro.obs import parse_slo
+
+    assert parse_slo("a=1.5,drift_free") == {"a": 1.5, "drift_free": True}
+    assert parse_slo({"k": 2}) == {"k": 2}
+    p = tmp_path / "slo.json"
+    p.write_text('{"ttft_p95_s": 0.25}')
+    assert parse_slo(str(p)) == {"ttft_p95_s": 0.25}
+    with pytest.raises(ValueError):
+        parse_slo("  ")
+
+
+def test_obs_cli_diff_slo_attribution_history(tmp_path, capsys):
+    from repro.obs.__main__ import main as obs_main
+
+    a = MetricsRegistry()
+    a.counter("x").add(1)
+    afile = tmp_path / "a.json"
+    afile.write_text(a.to_json())
+    b = MetricsRegistry()
+    b.counter("x").add(5)
+    bfile = tmp_path / "b.json"
+    bfile.write_text(b.to_json())
+    assert obs_main(["diff", str(afile), str(bfile)]) == 0
+    assert obs_main(["diff", str(afile), str(bfile),
+                     "--fail-on-change"]) == 1
+    assert obs_main(["diff", str(afile), str(afile),
+                     "--fail-on-change"]) == 0
+    # slo: exit 0 on pass, 1 on violation
+    assert obs_main(["slo", "max:x=10", "--metrics", str(afile)]) == 0
+    assert obs_main(["slo", "max:x=0.5", "--metrics", str(bfile)]) == 1
+    # attribution: render a spans export
+    from repro.obs import SpanTracker
+
+    sp = SpanTracker()
+    sp.set_tick(0)
+    rid = sp.start("request", cls=1)
+    sp.event(rid, "serve.ingress")
+    sp.add_component(rid, "fabric.transit", 3)
+    sp.set_tick(2)
+    sp.event(rid, "serve.first_token")
+    sp.finish(rid)
+    sfile = tmp_path / "spans.json"
+    sfile.write_text(json.dumps(sp.export()))
+    assert obs_main(["attribution", str(sfile)]) == 0
+    out = capsys.readouterr().out
+    assert "ttft_ticks" in out and "request attribution" in out
+    # history: tabulate bench_history.jsonl rows
+    hfile = tmp_path / "hist.jsonl"
+    hfile.write_text(
+        json.dumps({"git_sha": "abc123def456", "timestamp": "t0",
+                    "metrics": {"fabric": {"smoke_frames_per_s": 1000.0}}})
+        + "\n"
+        + json.dumps({"git_sha": "def456abc789", "timestamp": "t1",
+                      "metrics": {"fabric": {"smoke_frames_per_s": 1100.0}}})
+        + "\n")
+    assert obs_main(["history", str(hfile)]) == 0
+    out = capsys.readouterr().out
+    assert "2 run(s)" in out and "fabric.smoke_frames_per_s" in out
+    assert obs_main(["history", str(tmp_path / "missing.jsonl")]) == 2
+    # the legacy single-file form is untouched by subcommand dispatch
+    assert obs_main([str(afile), "--validate"]) == 0
+
+
 def test_batcher_metrics_admit_evict_occupancy(serve_setup):
     from repro.runtime.scheduler import ContinuousBatcher, SchedulerConfig
 

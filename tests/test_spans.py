@@ -1,0 +1,296 @@
+"""End-to-end request tracing: flight recorder + causal spans + SLO gates.
+
+The acceptance criteria of the tracing PR:
+
+* **attribution exactness** — the per-frame flight-recorder columns the
+  router scan carries (queue wait / per-axis transit / starvation stall /
+  defections) reconstruct ``Delivery.arrive_step`` EXACTLY:
+  ``queue_wait + stall + total_transit == arrive_step`` for every
+  delivered message, under dimension-order, shortest-path and
+  congestion-defection routing alike;
+* **engine bit-identity** — the fused single-jit tick and the
+  three-program path produce identical attribution vectors (the columns
+  are step-indexed event counts carried with the frames, so engine choice
+  cannot skew them);
+* **tick telescoping** — the span tick marks (ingress / admit / first
+  flush / first token) break TTFT into components whose sum equals the
+  end-to-end tick count exactly, by construction;
+* **byte invisibility** — attaching a SpanTracker (and the trace flow
+  events it emits) to the streaming serve loop changes ZERO response
+  bytes;
+* **degrade, never vanish** — a seeded ``tx_hook`` corruption yields a
+  span marked degraded with the reason (``crc`` / ``seq-gap``), not a
+  silently missing or miswired request.
+
+Runs on the 8 simulated host devices from ``conftest.py``.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.fabric import Fabric, FabricConfig
+from repro.obs import (
+    FrameAttribution,
+    SpanTracker,
+    TraceRecorder,
+    tick_breakdown,
+    validate_trace,
+)
+
+# ---------------------------------------------------------------------------
+# flight recorder: exact arrive-step reconstruction + engine bit-identity
+# ---------------------------------------------------------------------------
+
+
+def _run_fabric(fused, routing, defect_after, n=8):
+    fab = Fabric(n_ranks=n, config=FabricConfig(
+        frame_phits=2, credits=2, routing=routing, qos_weights=(2, 1),
+        fused=fused, defect_after=defect_after))
+    boxes = [fab.mailbox(r) for r in range(n)]
+    for s in range(n):
+        for d in range(n):
+            if s != d:
+                boxes[s].send(d, bytes([s, d]) * 17, list_level=1 + (s % 2),
+                              request_id=s * n + d)
+    fab.exchange()
+    rows = []
+    for r in range(n):
+        for dv in boxes[r].recv():
+            assert dv.ok
+            att = dv.attribution
+            assert isinstance(att, FrameAttribution)
+            # the telescoping identity: at every executed step the critical
+            # frame was queued-waiting, stalled-eligible, or hopping
+            assert att.wait + att.stall + att.total_transit \
+                == att.arrive_step == dv.arrive_step, (r, dv.src)
+            # rid correlation through the (src, dst, seq) route-word range
+            assert dv.request_id == dv.src * n + r
+            rows.append((r, dv.src, dv.request_id, att))
+    return sorted(rows, key=lambda t: t[:3])
+
+
+@pytest.mark.parametrize("routing,defect_after", [
+    ("dimension", 0), ("shortest", 0), ("shortest", 2),
+])
+def test_attribution_reconstructs_arrive_step_exactly(routing, defect_after):
+    """Every delivery's flight-recorder vector sums to its arrive step
+    exactly, and the fused and three-program engines agree bit-for-bit."""
+    fused_rows = _run_fabric(True, routing, defect_after)
+    three_rows = _run_fabric(False, routing, defect_after)
+    assert len(fused_rows) == 8 * 7
+    assert fused_rows == three_rows  # attribution is engine-invariant
+
+
+def test_attribution_components_and_histograms():
+    """The component dict drives the per-class ``fabric.attr.*``
+    histograms, and a congested workload actually records nonzero wait."""
+    fab = Fabric(n_ranks=8, config=FabricConfig(
+        frame_phits=2, credits=2, qos_weights=(2, 1)))
+    boxes = [fab.mailbox(r) for r in range(8)]
+    for s in range(1, 8):
+        boxes[s].send(0, bytes([s]) * 40, list_level=1 + (s % 2),
+                      request_id=100 + s)  # hotspot: everyone dogpiles rank 0
+    fab.exchange()
+    got = boxes[0].recv()
+    assert len(got) == 7
+    comp_sum = {}
+    for dv in got:
+        comps = dv.attribution.components()
+        assert set(comps) == {"queue_wait", "stall", "transit", "defections"}
+        assert comps["queue_wait"] + comps["stall"] + comps["transit"] \
+            == dv.arrive_step
+        for k, v in comps.items():
+            comp_sum[k] = comp_sum.get(k, 0) + v
+    assert comp_sum["transit"] > 0
+    # under a 7-to-1 hotspot with 2 credits the later frames MUST have
+    # waited or stalled somewhere
+    assert comp_sum["queue_wait"] + comp_sum["stall"] > 0
+    names = {k for k in fab.metrics.flat() if k.startswith("fabric.attr.")}
+    for leg in ("queue_wait", "stall", "transit", "defections"):
+        assert any(k.startswith(f"fabric.attr.{leg}") for k in names), leg
+
+
+# ---------------------------------------------------------------------------
+# spans: telescoping breakdown + degradation under seeded faults
+# ---------------------------------------------------------------------------
+
+
+def test_tick_breakdown_telescopes_exactly():
+    sp = SpanTracker()
+    sp.set_tick(0)
+    rid = sp.start("request", cls=1)
+    sp.event(rid, "serve.ingress")
+    sp.set_tick(2)
+    sp.event(rid, "batcher.admit")
+    sp.set_tick(5)
+    sp.event(rid, "stream.first_flush")
+    sp.set_tick(6)
+    sp.event(rid, "serve.first_token")
+    sp.finish(rid)
+    bd = tick_breakdown(sp.get(rid))
+    assert bd == {"admit_wait": 2, "decode": 3, "return": 1, "ttft_ticks": 6}
+    assert sum(v for k, v in bd.items() if k != "ttft_ticks") \
+        == bd["ttft_ticks"]
+    # a skipped mark merges its delta into the next, still telescoping
+    rid2 = sp.start("request")
+    sp.set_tick(6)
+    sp.event(rid2, "serve.ingress")
+    sp.set_tick(9)
+    sp.event(rid2, "serve.first_token")
+    bd2 = tick_breakdown(sp.get(rid2))
+    assert sum(v for k, v in bd2.items() if k != "ttft_ticks") \
+        == bd2["ttft_ticks"] == 3
+
+
+def test_unknown_rid_surfaces_as_anomaly_never_raises():
+    sp = SpanTracker()
+    sp.event(999, "batcher.admit")
+    sp.degrade(999, "crc")
+    sp.add_component(999, "fabric.transit", 1)
+    assert len(sp.anomalies) == 3
+    assert all(a["name"] == "span.unknown_rid" for a in sp.anomalies)
+
+
+def _send_multiframe(tx_hook):
+    """One multi-frame message rank 1 -> rank 0 through a seeded fault."""
+    fab = Fabric(n_ranks=4, config=FabricConfig(frame_phits=2, credits=4))
+    spans = SpanTracker()
+    fab.spans = spans
+    rid = spans.start("request", req=0)
+    fab.tx_hook = tx_hook
+    fab.mailbox(1).send(0, bytes(range(64)), request_id=rid)
+    fab.exchange()
+    return spans, rid, fab.mailbox(0).recv()
+
+
+def test_seeded_payload_corruption_degrades_span_with_crc():
+    """Satellite: a tx_hook flipping payload bits of a NON-FIRST frame
+    must yield a delivery still correlated to its request id, with the
+    span degraded ``crc`` — never silently missing or miswired."""
+    def corrupt(tx, tx_valid):
+        tx = np.array(tx)
+        assert int(np.asarray(tx_valid)[1].sum()) >= 2, \
+            "need a multi-frame send"
+        tx[1, 1, 5] ^= 0xFF  # payload phit of the second frame
+        return tx
+
+    spans, rid, got = _send_multiframe(corrupt)
+    assert len(got) == 1 and not got[0].ok
+    assert got[0].request_id == rid  # first frame intact -> still matched
+    span = spans.get(rid)
+    assert span.degraded and "crc" in span.reasons
+    assert not spans.anomalies
+
+
+def test_seeded_seq_rewrite_degrades_span_with_seq_gap():
+    """Satellite: rewriting a non-first frame's seq field creates a frame
+    sequence gap; the span is degraded ``seq-gap``, still correlated."""
+    from repro.fabric.frames import HDR_ROUTE
+
+    def skip_seq(tx, tx_valid):
+        tx = np.array(tx)
+        w = int(tx[1, 1, HDR_ROUTE])
+        tx[1, 1, HDR_ROUTE] = (w & ~0xFFFF) | ((w + 5) & 0xFFFF)
+        return tx
+
+    spans, rid, got = _send_multiframe(skip_seq)
+    assert len(got) == 1 and not got[0].ok
+    assert got[0].request_id == rid
+    span = spans.get(rid)
+    assert span.degraded and "seq-gap" in span.reasons
+
+
+# ---------------------------------------------------------------------------
+# streaming serve: end-to-end arcs, TTFT identity, byte invisibility
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.configs import get_config, smoke_config
+    from repro.launch.serve import encode_request
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    wires = []
+    for r in range(3):
+        prompts = [
+            list(map(int, rng.integers(2, cfg.vocab, int(rng.integers(8, 16)))))
+            for _ in range(int(rng.integers(1, 3)))
+        ]
+        wires.append(encode_request(r, prompts))
+    return params, cfg, wires
+
+
+def test_streaming_serve_spans_end_to_end(serve_setup):
+    """One span per request wire, closed, undegraded, with the tick
+    breakdown telescoping to TTFT exactly and the on-device fabric
+    components attached — and attaching the tracker + trace changes zero
+    response bytes."""
+    from repro.launch.serve import serve_requests_streaming
+
+    params, cfg, wires = serve_setup
+    kw = dict(max_new=4, pad_to=8, slots=4, n_shards=2)
+    plain = serve_requests_streaming(params, cfg, wires, **kw)
+    trace = TraceRecorder()
+    spans = SpanTracker(trace)
+    observed = serve_requests_streaming(
+        params, cfg, wires, trace=trace, spans=spans, **kw)
+    assert observed == plain  # tracing must never touch tokens
+
+    reqs = spans.requests()
+    assert len(reqs) == len(wires)
+    for span in reqs:
+        assert span.done and not span.degraded, span.rid
+        bd = tick_breakdown(span)
+        # every serve tick mark was hit, and the components telescope
+        assert {"admit_wait", "ttft_ticks"} <= set(bd)
+        assert sum(v for k, v in bd.items() if k != "ttft_ticks") \
+            == bd["ttft_ticks"]
+        assert span.first_tick("serve.ingress") == 0
+        assert span.first_tick("serve.first_token") == bd["ttft_ticks"]
+        # the request wire's fabric legs rode along (flight recorder)
+        assert "fabric.transit" in span.components
+        assert span.components["fabric.queue_wait"] \
+            + span.components["fabric.stall"] >= 0
+        names = [e.name for e in span.events]
+        for must in ("serve.ingress", "fabric.deliver", "batcher.admit",
+                     "stream.first_flush", "serve.first_token",
+                     "batcher.evict", "request.done"):
+            assert must in names, (span.rid, must)
+    assert not spans.anomalies
+
+    # the trace renders each request as one connected flow arc: an origin
+    # ("s"), steps ("t") and a terminus ("f") all sharing the span id
+    obj = trace.to_json()
+    assert validate_trace(obj) == []
+    flows = [e for e in obj["traceEvents"]
+             if e.get("cat") == "span" and e.get("ph") in "stf"]
+    by_rid = {}
+    for e in flows:
+        by_rid.setdefault(e["id"], set()).add(e["ph"])
+    assert set(by_rid) == {s.rid for s in reqs}
+    assert all(phs == {"s", "t", "f"} for phs in by_rid.values())
+
+    # the export round-trips through JSON and carries the breakdowns
+    export = json.loads(json.dumps(spans.export()))
+    assert len(export["requests"]) == len(wires)
+    assert all(r["breakdown"]["ttft_ticks"] >= 1 for r in export["requests"])
+
+
+def test_streaming_serve_trace_auto_creates_spans(serve_setup):
+    """Passing only a trace still traces requests (SpanTracker is
+    auto-created) — the CLI's --trace-out gets flow arcs for free."""
+    from repro.launch.serve import serve_requests_streaming
+
+    params, cfg, wires = serve_setup
+    trace = TraceRecorder()
+    serve_requests_streaming(params, cfg, wires, max_new=4, pad_to=8,
+                             slots=4, n_shards=2, trace=trace)
+    assert any(e.get("ph") == "s" and e.get("cat") == "span"
+               for e in trace.events)
