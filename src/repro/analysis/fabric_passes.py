@@ -34,6 +34,13 @@ def analyze_fabric_values(
     rx_frames: Optional[int] = None,
     n_ranks: Optional[int] = None,
     sizes: Optional[Sequence[int]] = None,
+    arq: bool = False,
+    retransmit_timeout: int = 8,
+    max_retries: int = 4,
+    arq_buffer: int = 1024,
+    arq_level: int = 255,
+    arq_skip_after: int = 0,
+    suspect_after: Optional[int] = None,
     location: str = "FabricConfig",
 ) -> List[Finding]:
     """Analyze raw fabric-config values (no FabricConfig construction, so
@@ -42,6 +49,10 @@ def analyze_fabric_values(
     fs = fabric_config_findings(
         frame_phits, credits, routing, defect_after, qos_weights,
         sizes=sizes, location=location,
+        arq=arq, retransmit_timeout=retransmit_timeout,
+        max_retries=max_retries, arq_buffer=arq_buffer,
+        arq_level=arq_level, arq_skip_after=arq_skip_after,
+        suspect_after=suspect_after,
     )
     if rx_frames is not None and rx_frames < 1:
         fs.append(finding(
@@ -71,6 +82,12 @@ def analyze_fabric(fabric, location: Optional[str] = None) -> List[Finding]:
         rx_frames=cfg.rx_frames,
         n_ranks=fabric.n_ranks,
         sizes=sizes,
+        arq=cfg.arq,
+        retransmit_timeout=cfg.retransmit_timeout,
+        max_retries=cfg.max_retries,
+        arq_buffer=cfg.arq_buffer,
+        arq_level=cfg.arq_level,
+        arq_skip_after=cfg.arq_skip_after,
         location=location or f"Fabric(n_ranks={fabric.n_ranks})",
     )
 

@@ -134,6 +134,27 @@ RULES: Dict[str, Rule] = {
              "window",
              "split the burst across ticks — seq aliasing breaks the "
              "receiver's reorder-by-seq reassembly"),
+        Rule("fabric-arq-config", Severity.ERROR,
+             "the ARQ knobs are in range (timeout >= 1, retries >= 0, "
+             "buffer >= 1, control level fits the u8 lane)",
+             "fix the out-of-range ARQ field (or set arq=False)"),
+        Rule("fabric-arq-window", Severity.ERROR,
+             "the retransmit buffer stays inside half the u16 seq window "
+             "so cumulative ACKs are unambiguous",
+             "keep arq_buffer < SEQ_MOD // 2 — past that a retransmit "
+             "may alias a message half a window away"),
+        Rule("fabric-arq-control-class", Severity.ERROR,
+             "the ACK/NACK control class earns a nonzero "
+             "weight-proportional credit share",
+             "raise the control class's qos weight (or move arq_level to "
+             "a heavier class) — recovery liveness depends on control "
+             "frames draining every step, not on the floor bump"),
+        Rule("fabric-arq-timeout", Severity.ERROR,
+             "skip and blackout-detection horizons sit above the "
+             "retransmit timeout",
+             "set arq_skip_after and suspect_after > retransmit_timeout "
+             "so a healthy peer's first retransmit can arrive before it "
+             "is skipped or suspected"),
         # -- stream plane ---------------------------------------------------
         Rule("stream-chunk-tokens", Severity.ERROR,
              "a chunk's token count fits the count-word sanity bound",

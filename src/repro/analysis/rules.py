@@ -69,6 +69,14 @@ def fabric_config_findings(
     qos_weights: Optional[Tuple[int, ...]],
     sizes: Optional[Sequence[int]] = None,
     location: str = "FabricConfig",
+    *,
+    arq: bool = False,
+    retransmit_timeout: int = 8,
+    max_retries: int = 4,
+    arq_buffer: int = 1024,
+    arq_level: int = 255,
+    arq_skip_after: int = 0,
+    suspect_after: Optional[int] = None,
 ) -> List[Finding]:
     """Every static finding derivable from FabricConfig fields alone.
 
@@ -76,6 +84,9 @@ def fabric_config_findings(
     runtime construction and the analyzer agree word for word; WARN-level
     findings (quota floors, defection bounds — the latter only when the
     mesh ``sizes`` are known) surface exclusively through the analyzer.
+    ``suspect_after`` is the serve-plane blackout-detection knob: it never
+    lives on FabricConfig, but its consistency with the ARQ timeouts is a
+    fabric property, so the rule lives here with the rest.
     """
     fs: List[Finding] = []
     if frame_phits < 1 or credits < 1:
@@ -141,5 +152,110 @@ def fabric_config_findings(
             f"{tuple(sizes)}: a starved frame waits longer than riding "
             f"the whole ring the long way, and the scan bound inflates "
             f"past the dimension-order worst case",
+        ))
+    if arq:
+        fs.extend(arq_config_findings(
+            credits=credits,
+            qos_weights=qos_weights,
+            retransmit_timeout=retransmit_timeout,
+            max_retries=max_retries,
+            arq_buffer=arq_buffer,
+            arq_level=arq_level,
+            arq_skip_after=arq_skip_after,
+            suspect_after=suspect_after,
+            location=location,
+        ))
+    return fs
+
+
+def arq_config_findings(
+    *,
+    credits: int = 4,
+    qos_weights: Optional[Tuple[int, ...]] = None,
+    retransmit_timeout: int = 8,
+    max_retries: int = 4,
+    arq_buffer: int = 1024,
+    arq_level: int = 255,
+    arq_skip_after: int = 0,
+    suspect_after: Optional[int] = None,
+    location: str = "FabricConfig",
+) -> List[Finding]:
+    """Static findings for the ARQ reliability layer (``arq=True``).
+
+    Three properties, shared verbatim by ``FabricConfig.__post_init__``
+    and the analyzer:
+
+    * **seq-window ambiguity**: the per-(src, dst) retransmit buffer must
+      stay strictly inside half the u16 seq window — with ``arq_buffer >=
+      SEQ_MOD // 2`` a cumulative ACK can no longer tell "already
+      delivered" from "half a window behind" and a retransmit may resolve
+      to the wrong message bytes.
+    * **control-class credit floor**: ACK/NACK control frames ride QoS
+      class ``arq_level % len(qos_weights)``; if that class's
+      weight-proportional share of the link credits floors to zero, bulk
+      data can starve the very frames that un-starve it (recovery
+      liveness depends on control traffic draining every step).
+    * **timeout consistency**: the give-up/skip horizon and the serve
+      plane's blackout detector must both sit ABOVE the retransmit
+      timeout, or a healthy peer gets skipped/suspected before its first
+      retransmit could possibly arrive.
+    """
+    from ..fabric.frames import SEQ_MOD
+
+    fs: List[Finding] = []
+    if retransmit_timeout < 1 or max_retries < 0 or arq_buffer < 1 \
+            or arq_skip_after < 0:
+        fs.append(finding(
+            "fabric-arq-config", location,
+            f"need retransmit_timeout >= 1, max_retries >= 0, "
+            f"arq_buffer >= 1, arq_skip_after >= 0; got "
+            f"retransmit_timeout={retransmit_timeout}, "
+            f"max_retries={max_retries}, arq_buffer={arq_buffer}, "
+            f"arq_skip_after={arq_skip_after}",
+        ))
+    lvl_err = list_level_error(arq_level)
+    if lvl_err is not None:
+        fs.append(finding(
+            "fabric-arq-config", location, f"arq_level: {lvl_err}",
+        ))
+    if arq_buffer >= SEQ_MOD // 2:
+        fs.append(finding(
+            "fabric-arq-window", location,
+            f"arq_buffer={arq_buffer} reaches half the u16 seq window "
+            f"(SEQ_MOD//2={SEQ_MOD // 2}): cumulative ACKs become "
+            f"ambiguous and a retransmit may alias a message half a "
+            f"window away",
+        ))
+    if (
+        qos_weights is not None and len(qos_weights) >= 1
+        and all(w >= 1 for w in qos_weights) and credits >= len(qos_weights)
+    ):
+        cls = int(arq_level) % len(qos_weights)
+        total = sum(qos_weights)
+        if math.floor(credits * qos_weights[cls] / total) == 0:
+            fs.append(finding(
+                "fabric-arq-control-class", location,
+                f"ARQ control class {cls} (arq_level={arq_level} % "
+                f"{len(qos_weights)} classes) earns a zero "
+                f"weight-proportional share of {credits} credits under "
+                f"weights {tuple(qos_weights)}: ACK/NACK frames survive "
+                f"only on the 1-credit floor bump while recovery "
+                f"liveness depends on them",
+            ))
+    if arq_skip_after > 0 and arq_skip_after <= retransmit_timeout:
+        fs.append(finding(
+            "fabric-arq-timeout", location,
+            f"arq_skip_after={arq_skip_after} must exceed "
+            f"retransmit_timeout={retransmit_timeout}: the receiver "
+            f"would skip past a gap before the sender's first "
+            f"retransmit could arrive",
+        ))
+    if suspect_after is not None and suspect_after <= retransmit_timeout:
+        fs.append(finding(
+            "fabric-arq-timeout", location,
+            f"suspect_after={suspect_after} must exceed "
+            f"retransmit_timeout={retransmit_timeout}: a healthy shard "
+            f"mid-retransmit would be declared suspect and its requests "
+            f"re-placed for no fault",
         ))
     return fs

@@ -71,6 +71,11 @@ def fabric_targets() -> List[Tuple[str, dict]]:
     targets: List[Tuple[str, dict]] = [
         ("launch.default_serve_fabric", dict(
             frame_phits=16, credits=4, routing="shortest", sizes=sizes,
+            arq=True, suspect_after=24,
+        )),
+        ("bench_fabric.faulty_link.arq", dict(
+            frame_phits=BENCH_FRAME_PHITS, credits=8, routing="shortest",
+            sizes=sizes, arq=True,
         )),
         ("bench_fabric.dimension", dict(
             frame_phits=BENCH_FRAME_PHITS, credits=8, routing="dimension",

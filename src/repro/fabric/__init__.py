@@ -13,8 +13,12 @@ Layers (each importable on its own):
 * ``frames``  — wire format: CRC32, route words, frame/unframe (shared with
   ``runtime.channels``);
 * ``router``  — device-side multi-hop delivery (shard_map + ppermute scan);
-* ``mailbox`` — host-side message API over the router.
+* ``mailbox`` — host-side message API over the router (plus the ARQ
+  retransmission layer, ``FabricConfig(arq=True)``);
+* ``faults``  — seeded deterministic chaos injection (:class:`FaultPlan`),
+  applied identically to both tick engines.
 """
+from .faults import FaultPlan, parse_chaos
 from .frames import (
     ADAPTIVE_BIT,
     FRAME_PHITS,
@@ -36,10 +40,11 @@ from .frames import (
     unpack_route,
     verify_frames,
 )
-from .mailbox import Delivery, Fabric, Mailbox
+from .mailbox import Delivery, Fabric, FabricCorruption, Mailbox
 from .router import FabricConfig, Router
 
 __all__ = [
+    "FaultPlan", "parse_chaos", "FabricCorruption",
     "ADAPTIVE_BIT", "FRAME_PHITS", "HDR_WORDS", "MAX_RANKS", "PHIT_WORDS",
     "SEQ_MOD", "crc32_words", "frame_capacity", "frame_parts",
     "frame_parts_batch", "frame_stream", "pack_route", "route_adaptive",

@@ -169,6 +169,38 @@ class FabricConfig:
     #: needs the axis (one global psum of a bool per step); the static
     #: demand bound becomes a cap instead of the price every tick pays.
     early_exit: bool = True
+    #: ARQ reliability layer (``mailbox.py``): senders keep sent messages
+    #: in a bounded per-(src, dst) retransmit buffer keyed by the route
+    #: word's seq; receivers turn CRC failures and seq gaps into compact
+    #: NACK / cumulative-ACK control frames riding QoS class
+    #: ``arq_level``; senders retransmit on NACK or on a tick-count
+    #: timeout with capped exponential backoff.  Off by default — the
+    #: detection-only (flag-and-deliver) behavior of PRs 2-8, bit for
+    #: bit.  The serve plane opts in (``default_serve_fabric``).
+    arq: bool = False
+    #: ticks without an ACK before a sender retransmits unprompted
+    #: (doubles per retry, capped at 32x)
+    retransmit_timeout: int = 8
+    #: retransmits per message before the sender gives up and dead-letters
+    #: it (0 = a single NACK/timeout aborts immediately)
+    max_retries: int = 4
+    #: retransmit-buffer bound per (src, dst) stream, in FRAMES — must
+    #: stay under SEQ_MOD // 2 or cumulative ACKs turn ambiguous
+    #: (rule ``fabric-arq-window``)
+    arq_buffer: int = 1024
+    #: ListLevel the ACK/NACK control frames ride (reserved: user sends
+    #: at this level are rejected while arq is on) — under qos_weights it
+    #: maps to credit class ``arq_level % n_classes``, which must earn a
+    #: nonzero quota (rule ``fabric-arq-control-class``)
+    arq_level: int = 255
+    #: receiver give-up horizon: after this many ticks stuck on one seq
+    #: gap, flag the partial message and resync past it.  0 = derive from
+    #: the retransmit schedule (timeout * (max_retries + 2))
+    arq_skip_after: int = 0
+    #: receiver ACK cadence: cumulative-ACK every Nth tick that delivered
+    #: in-order frames (1 = every tick; coalescing keeps control traffic
+    #: sublinear in message rate)
+    arq_ack_every: int = 2
 
     def __post_init__(self) -> None:
         # the analyzer's fabric pass is the single source of these checks
@@ -178,9 +210,21 @@ class FabricConfig:
         for f in fabric_config_findings(
             self.frame_phits, self.credits, self.routing,
             self.defect_after, self.qos_weights,
+            arq=self.arq, retransmit_timeout=self.retransmit_timeout,
+            max_retries=self.max_retries, arq_buffer=self.arq_buffer,
+            arq_level=self.arq_level, arq_skip_after=self.arq_skip_after,
         ):
             if f.severity is Severity.ERROR:
                 raise ValueError(f.message)
+
+    @property
+    def skip_after(self) -> int:
+        """Effective receiver give-up horizon (resolves the 0 default
+        from the retransmit schedule: every retry must have had a chance
+        to arrive before the receiver resyncs past the gap)."""
+        if self.arq_skip_after > 0:
+            return self.arq_skip_after
+        return self.retransmit_timeout * (self.max_retries + 2)
 
     @property
     def frame_width(self) -> int:
@@ -877,6 +921,7 @@ class Router:
         send_valid: np.ndarray,  # (R, Bmax) bool — real send vs padding row
         axis_steps: Tuple[Tuple[int, int], ...],
         total: int,
+        faults: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
     ):
         """One fused tick: frame every rank's sends, lay the live frames out
         as that rank's TX queue, run the routed scan, and split the
@@ -885,6 +930,14 @@ class Router:
         trips and no cross-device data motion beyond the routing ppermutes
         themselves.
 
+        ``faults`` (the :class:`~repro.fabric.faults.FaultPlan` injection
+        point, mapped to this engine's canonical row layout by the
+        mailbox) is ``(gather (R, T) int32, xor (R, T, W) u32, valid
+        (R, T) bool)``: after framing, each rank's TX queue becomes
+        ``tx[gather] ^ xor`` with ``valid`` as the post-fault liveness —
+        drop, corrupt, duplicate, and reorder all reduce to this one
+        gather+xor, so the injected tick stays a single jit.
+
         Returns device arrays ``(rx_hdr (R, cap, HDR_WORDS), rx_pay
         (R, cap, frame_words), rx_cnt, ok, crc_ok, rx_step, rx_att,
         counters)`` (``rx_att`` per-frame in the ``ATT_*`` layout,
@@ -892,20 +945,28 @@ class Router:
         caller materializes host bytes only at reassembly time
         (``Mailbox.recv``).
         """
-        key = (payloads.shape[1], payloads.shape[2], axis_steps, total)
+        key = (payloads.shape[1], payloads.shape[2], axis_steps, total,
+               faults is not None)
         fn = self._fused.get(key)
         if fn is None:
             fn = self._fused[key] = self._build_fused(
-                payloads.shape[1], payloads.shape[2], axis_steps, total
+                payloads.shape[1], payloads.shape[2], axis_steps, total,
+                faulted=faults is not None,
             )
-        return fn(
+        base = (
             jnp.asarray(payloads), jnp.asarray(nbytes), jnp.asarray(routes),
             jnp.asarray(levels), jnp.asarray(send_valid),
         )
+        if faults is None:
+            return fn(*base)
+        gather, xor, fvalid = faults
+        return fn(*base, jnp.asarray(gather), jnp.asarray(xor),
+                  jnp.asarray(fvalid))
 
     def _build_fused(
         self, Bmax: int, Wcap: int,
         axis_steps: Tuple[Tuple[int, int], ...], total: int,
+        faulted: bool = False,
     ):
         # deferred import: keep package init order independent
         from .frames import frame_parts_batch
@@ -920,7 +981,8 @@ class Router:
         route_local = self._build_local(T, axis_steps, q_cap, rx_cap)
         adaptive = cfg.adaptive
 
-        def local(payloads, nbytes, routes, levels, svalid):
+        def local(payloads, nbytes, routes, levels, svalid,
+                  gather=None, xorv=None, fvalid=None):
             # (1, Bmax, …) — one device's pending sends.  Framing here means
             # the frames are BORN on the rank that owns them: no global
             # scatter, no resharding — the only cross-device traffic in the
@@ -941,6 +1003,12 @@ class Router:
             tx_valid = (
                 svalid[0][:, None] & (fidx < n_live[:, None])
             ).reshape(1, T)
+            if gather is not None:
+                # fault injection: the post-fault queue is a gather of the
+                # canonical rows (drop = row masked out, dup = row sourced
+                # twice, reorder = permuted gather) XOR a corruption mask
+                tx = (tx[0][gather[0]] ^ xorv[0])[None]
+                tx_valid = fvalid
             rx, rx_cnt, ok, crc_ok, rx_step, rx_att, ctr = route_local(
                 tx, tx_valid
             )
@@ -956,7 +1024,7 @@ class Router:
             shard_map(
                 local,
                 mesh=self.mesh,
-                in_specs=(spec,) * 5,
+                in_specs=(spec,) * (8 if faulted else 5),
                 out_specs=(spec,) * 8,
                 check_rep=False,
             )

@@ -224,6 +224,7 @@ def place_requests(
     shards: List[int],
     capacity: int,
     weights: Optional[List[int]] = None,
+    exclude=(),
 ) -> List[int]:
     """Topology-aware ingress placement (ROADMAP item): requests go to the
     nearest shard with free capacity instead of round-robin.
@@ -244,9 +245,21 @@ def place_requests(
     ``2 * min_hops``, so near ranks genuinely cost less and placement
     prefers them.  Placement cannot change tokens — rows decode
     independently — only how far each request's wires travel.
+
+    ``exclude`` removes shards from consideration entirely — the serve
+    plane passes its *suspect* set (ranks that stopped ACKing) so
+    neither fresh placement nor a retry ever lands on a rank believed
+    dead.  Excluding every shard raises rather than silently placing on
+    a suspect.
     """
+    live = [s for s in shards if s not in exclude]
+    if not live:
+        raise ValueError(
+            f"no healthy shard to place on: all of {sorted(shards)} are "
+            f"excluded (suspect)"
+        )
     order = sorted(
-        shards,
+        live,
         key=lambda s: (router.route_hops(0, s) + router.route_hops(s, 0), s),
     )
     w = weights if weights is not None else [1] * n_requests
@@ -285,7 +298,8 @@ def _analyze_serve(fabric, n_requests: int, context: str) -> None:
 
 def default_serve_fabric(
     n_shards: Optional[int] = None, routing: str = "shortest",
-    defect_after: int = 0, analyze: bool = False,
+    defect_after: int = 0, analyze: bool = False, arq: bool = True,
+    faults=None,
 ):
     """The fabric ``serve_requests_sharded`` builds when none is passed:
     rank 0 ingress plus up to 7 serving shards on the available devices,
@@ -294,6 +308,13 @@ def default_serve_fabric(
     ``defect_after=k`` enables congestion-aware direction defection: a
     frame whose preferred ring direction has been credit-starved for k
     consecutive router steps escapes to the other direction.
+
+    ``arq=True`` (the serving default) turns on reliable delivery: every
+    request/response/chunk message is retransmit-buffered and recovered
+    on NACK or timeout, so seeded chaos (``faults`` — a
+    ``fabric.faults.FaultPlan``, e.g. from ``parse_chaos``) degrades
+    latency instead of correctness.  ``arq=False`` is the escape hatch
+    back to flag-only delivery.
     Returns None when fewer than 2 ranks fit (no shard to route to)."""
     from ..fabric import Fabric, FabricConfig
 
@@ -307,12 +328,14 @@ def default_serve_fabric(
         )
     if n_ranks < 2:
         return None
-    return Fabric(
+    fab = Fabric(
         n_ranks=n_ranks,
         config=FabricConfig(frame_phits=16, routing=routing,
-                            defect_after=defect_after),
+                            defect_after=defect_after, arq=arq),
         analyze=analyze,
     )
+    fab.faults = faults
+    return fab
 
 
 def serve_requests_sharded(
@@ -331,6 +354,8 @@ def serve_requests_sharded(
     analyze: bool = False,
     metrics=None,
     trace=None,
+    suspect_after: Optional[int] = 24,
+    deadline_ticks: Optional[int] = None,
 ) -> List[bytes]:
     """Answer N request wires across fabric-connected serving shards.
 
@@ -347,6 +372,18 @@ def serve_requests_sharded(
     Token-identical to ``serve_requests`` on the same wires: both pad every
     prompt to the static ``pad_to``, and rows decode independently, so shard
     placement cannot change the greedy outputs.
+
+    Failure awareness (requires an ARQ fabric, the ``default_serve_fabric``
+    default): the loop keeps ticking until every request is answered or
+    ``deadline_ticks`` fabric ticks elapse (default 256 with ARQ; exactly
+    the legacy 2-exchange schedule without it), and a shard the ingress has
+    not heard from — no data, no ACKs — for more than ``suspect_after``
+    ticks while it still owes responses is marked *suspect*: its
+    outstanding requests are re-placed once onto healthy shards
+    (``place_requests(..., exclude=suspects)``).  Rows decode
+    independently and greedily, so a retried request re-decodes to the
+    same bytes and the answer stays byte-identical; a request whose retry
+    also dies raises.  ``suspect_after=None`` disables the detector.
 
     Falls back to the local batched plane when the fabric would have fewer
     than 2 ranks (no shard to route to).
@@ -372,40 +409,99 @@ def serve_requests_sharded(
             fabric.router, len(wires), shards, capacity=max(1, slots)
         )
 
-    # ingress -> shards: route the raw request wires
+    # ingress -> shards: route the raw request wires.  queue[s] is the
+    # FIFO of global request indices shard s owes responses for — every
+    # (src, dst) stream delivers in order (ARQ enforces it under faults),
+    # so the k-th response arriving from s answers queue[s][k]
+    queue: Dict[int, List[int]] = {s: [] for s in shards}
     for i, w in enumerate(wires):
+        queue[placement[i]].append(i)
         ingress.send(placement[i], w)
-    fabric.exchange()
 
-    # each shard answers its share through the batched plane
-    for s in shards:
-        box = fabric.mailbox(s)
-        arrived = box.recv()
-        if not arrived:
-            continue
-        bad = [d.src for d in arrived if not d.ok]
-        if bad:
-            raise RuntimeError(f"shard {s}: corrupt request frames from {bad}")
-        resp = serve_requests(
-            params, cfg, [d.wire for d in arrived], max_new=max_new,
-            pad_to=pad_to, slots=slots, admit_cap=admit_cap,
-        )
-        for rw in resp:
-            box.send(0, rw)
-    fabric.exchange()
-
-    # ingress: responses arrive per-shard in FIFO order; undo the placement
-    per_shard: Dict[int, List[bytes]] = {}
-    for d in ingress.recv():
-        if not d.ok:
-            raise RuntimeError(f"ingress: corrupt response frames from {d.src}")
-        per_shard.setdefault(d.src, []).append(d.wire)
-    out: List[bytes] = []
+    arq = bool(fabric.config.arq)
+    watch = arq and suspect_after is not None
+    max_ticks = (deadline_ticks or 256) if arq else 3
+    t0_tick = fabric.ticks if arq else 0
+    answered: Dict[int, bytes] = {}
     cursor = {s: 0 for s in shards}
-    for i in range(len(wires)):
-        s = placement[i]
-        out.append(per_shard[s][cursor[s]])
-        cursor[s] += 1
+    suspects: set = set()
+    retried: set = set()
+    wait_since: Dict[int, int] = {}  # shard -> tick its current debt began
+    for _ in range(max_ticks):
+        fabric.exchange()
+        # each shard answers newly arrived request wires through the
+        # batched plane and sends the response wires back
+        for s in shards:
+            box = fabric.mailbox(s)
+            arrived = box.recv()
+            if s in suspects or not arrived:
+                continue
+            bad = [d.src for d in arrived if not d.ok]
+            if bad:
+                raise RuntimeError(
+                    f"shard {s}: corrupt request frames from {bad}")
+            resp = serve_requests(
+                params, cfg, [d.wire for d in arrived], max_new=max_new,
+                pad_to=pad_to, slots=slots, admit_cap=admit_cap,
+            )
+            for rw in resp:
+                box.send(0, rw)
+        # ingress: responses arrive per-shard in FIFO order; undo the
+        # placement.  setdefault: when a slow shard was wrongly suspected,
+        # the FIRST answer (original or retry) wins — both are identical
+        for d in ingress.recv():
+            if not d.ok:
+                raise RuntimeError(
+                    f"ingress: corrupt response frames from {d.src}")
+            i = queue[d.src][cursor[d.src]]
+            cursor[d.src] += 1
+            answered.setdefault(i, d.wire)
+        if len(answered) == len(wires):
+            break
+        if not watch:
+            continue
+        for s in shards:
+            if s in suspects:
+                continue
+            outstanding = [i for i in queue[s][cursor[s]:]
+                           if i not in answered]
+            if not outstanding:
+                wait_since.pop(s, None)
+                continue  # a shard that owes nothing goes quiet, fine
+            # the horizon starts when the shard last spoke OR when its
+            # current debt began, whichever is later — a shard that sat
+            # idle before being handed a retry is not late
+            since = wait_since.setdefault(s, fabric.ticks)
+            heard = fabric.ticks_since_heard(0, s)
+            waited = (fabric.ticks - t0_tick) if heard is None else heard
+            waited = min(waited, fabric.ticks - since)
+            if waited <= suspect_after:
+                continue
+            # rank s stopped ACKing with responses outstanding: mark it
+            # suspect and retry its in-flight requests elsewhere, once
+            suspects.add(s)
+            # the fabric registry is always on (and IS `metrics` when one
+            # was passed), so recovery stays observable either way
+            fabric.metrics.counter("serve.suspects").add(1)
+            twice = [i for i in outstanding if i in retried]
+            if twice:
+                raise RuntimeError(
+                    f"sharded serve: request(s) {twice} failed on shard "
+                    f"{s} after a retry — no healthy shard answered")
+            repl = place_requests(
+                fabric.router, len(outstanding), shards,
+                capacity=max(1, slots), exclude=suspects)
+            for i, s2 in zip(outstanding, repl):
+                retried.add(i)
+                queue[s2].append(i)
+                ingress.send(s2, wires[i])
+                fabric.metrics.counter("serve.retries").add(1)
+    if len(answered) < len(wires):
+        missing = sorted(i for i in range(len(wires)) if i not in answered)
+        raise RuntimeError(
+            f"sharded serve: {len(missing)} request(s) unanswered after "
+            f"{max_ticks} fabric ticks (missing {missing[:8]})")
+    out = [answered[i] for i in range(len(wires))]
     if metrics is not None:
         metrics.gauge("fabric.load_drift.entries").set(
             len(fabric.load_drift())
@@ -443,6 +539,8 @@ def serve_requests_streaming(
     metrics=None,
     trace=None,
     spans=None,
+    suspect_after: Optional[int] = 24,
+    deadline_ticks: Optional[int] = None,
 ) -> List[bytes]:
     """Answer N request wires with token-level streamed responses.
 
@@ -508,6 +606,23 @@ def serve_requests_streaming(
     arc the attribution report breaks down.  All three are
     observation-only: tokens and final wires are byte-identical with or
     without them (property-tested).
+
+    Failure awareness (requires an ARQ fabric, the ``default_serve_fabric``
+    default): a shard the ingress has not heard from — no chunks, no ACKs
+    — for more than ``suspect_after`` fabric ticks while it still owes
+    live streams is marked *suspect*.  Its batcher and lanes are dropped,
+    its unfinished streams abandoned, and every request that had not
+    fully streamed there is re-sent once to a healthy shard
+    (``place_requests(..., exclude=suspects)``), where it re-decodes from
+    scratch and re-streams under fresh stream ids; greedy decode makes
+    the retried tokens — and therefore the final wires — byte-identical
+    to an undisturbed run.  Each retry leg is visible as a
+    ``serve.retry`` span event plus ``serve.retries``/``serve.suspects``
+    counters.  A request whose retry shard also dies raises.  When no
+    compute remains, the loop keeps draining in-flight chunks for up to
+    ``deadline_ticks`` fabric ticks (default 256 with ARQ; the legacy 3
+    without) before declaring the missing streams lost.
+    ``suspect_after=None`` disables the detector.
     """
     from ..stream import ChunkLane, StreamReader
 
@@ -559,8 +674,13 @@ def serve_requests_streaming(
     fabric.exchange()
 
     # shard setup: per-shard batcher + per-sequence stream writers.  The
-    # k-th delivery at shard s is the k-th request placed on s (per-source
-    # FIFO), which maps shard-local stream ids back to global requests.
+    # k-th delivery at shard s is the k-th entry of globals_of[s]
+    # (per-source FIFO; ARQ keeps it true under faults), which maps
+    # shard-local stream ids back to global requests — retried requests
+    # are appended to globals_of at re-send time, preserving the map.
+    arq = bool(fabric.config.arq)
+    watch = arq and suspect_after is not None
+    t0_tick = fabric.ticks if arq else 0
     globals_of = {s: [i for i, p in enumerate(placement) if p == s]
                   for s in shards}
     sched = SchedulerConfig(
@@ -570,21 +690,38 @@ def serve_requests_streaming(
     lanes: Dict[Tuple[int, int], ChunkLane] = {}
     writers: Dict[Tuple[int, int, int], object] = {}
     expected = []  # (src shard, stream_id) keys the reader must close
-    reader = StreamReader(metrics=metrics, spans=spans)
+    # corrupt deliveries on an ARQ fabric mean the link already gave up
+    # retransmitting (skip) — drop them and let the suspect machinery
+    # re-place the request instead of poisoning the stream
+    reader = StreamReader(metrics=metrics, spans=spans,
+                          on_corrupt="retry" if arq else "flag")
     open_streams: Dict[int, int] = {}  # rid -> streams not yet at EOS
-    for s in shards:
+    admitted = {s: 0 for s in shards}  # request wires admitted at s
+    suspects: set = set()
+    retried: set = set()
+    abandoned: set = set()  # (src, stream_id) keys of dead streams
+
+    def _admit(s: int) -> None:
+        # admit newly arrived request wires at shard s into its (possibly
+        # new) batcher — runs at setup and once per tick, so a retried
+        # request re-routed to s mid-serve joins its continuous batch
+        # exactly like an initial one
         box = fabric.mailbox(s)
         arrived = box.recv()
         if not arrived:
-            continue
+            return
         bad = [d.src for d in arrived if not d.ok]
         if bad:
             raise RuntimeError(f"shard {s}: corrupt request frames from {bad}")
         local_reqs = decode_request_batch([d.wire for d in arrived])
-        batcher = ContinuousBatcher(params, cfg, sched, metrics=metrics,
-                                    spans=spans)
-        batchers[s] = batcher
-        for k, (_, prompts) in enumerate(local_reqs):
+        batcher = batchers.get(s)
+        if batcher is None:
+            batcher = ContinuousBatcher(params, cfg, sched, metrics=metrics,
+                                        spans=spans)
+            batchers[s] = batcher
+        for d, (_, prompts) in zip(arrived, local_reqs):
+            k = admitted[s]
+            admitted[s] += 1
             lvl = levels[globals_of[s][k]]
             lane = lanes.setdefault(
                 (s, lvl),
@@ -595,10 +732,7 @@ def serve_requests_streaming(
                           metrics=metrics),
             )
             lane.spans = spans
-            # correlate the shard-local stream ids back to the request's
-            # span: the k-th delivery at shard s IS the k-th request
-            # placed on s (per-source FIFO), carrying its request_id
-            rid = arrived[k].request_id if spans is not None else None
+            rid = d.request_id if spans is not None else None
             for j, p in enumerate(prompts):
                 batcher.submit((k, j), p)
                 sid = (k << 16) | j
@@ -610,6 +744,86 @@ def serve_requests_streaming(
                     reader.span_ids[(s, sid)] = rid
                     open_streams[rid] = open_streams.get(rid, 0) + 1
 
+    for s in shards:
+        _admit(s)
+
+    def _live_expected():
+        return [key for key in expected if key not in abandoned]
+
+    def _stream_done(key) -> bool:
+        st = reader.streams.get(key)
+        return st is not None and st.eos
+
+    def _mark_suspect(s: int) -> None:
+        # rank s stopped ACKing: drop its compute and lanes, abandon its
+        # unfinished streams, and re-send every request that had not fully
+        # streamed there to a healthy shard — once; a second failure is an
+        # outage, not a flaky link.  Requests that already reached EOS on
+        # s keep their streams (and tokens) untouched.
+        suspects.add(s)
+        batchers.pop(s, None)
+        for key in [k for k in lanes if k[0] == s]:
+            del lanes[key]
+        for key in [k for k in writers if k[0] == s]:
+            del writers[key]
+        # the fabric registry is always on (and IS `metrics` when one was
+        # passed), so recovery stays observable either way
+        fabric.metrics.counter("serve.suspects").add(1)
+        inflight = []
+        for k, i in enumerate(globals_of[s]):
+            keys = [(s, (k << 16) | j) for j in range(len(reqs[i][1]))]
+            if k < admitted[s] and all(_stream_done(key) for key in keys):
+                continue
+            for key in keys:
+                abandoned.add(key)
+                rid = reader.span_ids.get(key)
+                if rid is not None and not _stream_done(key):
+                    open_streams[rid] = open_streams.get(rid, 1) - 1
+            if i in retried:
+                raise RuntimeError(
+                    f"streaming serve: request {i} failed on shard {s} "
+                    f"after a retry — no healthy shard answered it")
+            inflight.append(i)
+        if not inflight:
+            return
+        repl = place_requests(
+            fabric.router, len(inflight), shards, capacity=max(1, slots),
+            weights=[len(reqs[i][1]) for i in inflight], exclude=suspects)
+        for i, s2 in zip(inflight, repl):
+            retried.add(i)
+            globals_of[s2].append(i)
+            if spans is not None and rid_of[i] is not None:
+                spans.event(rid_of[i], "serve.retry", from_shard=s,
+                            to_shard=s2)
+            ingress.send(s2, wires[i], list_level=levels[i],
+                         request_id=rid_of[i])
+            fabric.metrics.counter("serve.retries").add(1)
+
+    wait_since: Dict[int, int] = {}  # shard -> tick its current debt began
+
+    def _check_suspects() -> None:
+        for s in shards:
+            if s in suspects:
+                continue
+            # only a shard that still owes something can be suspect — a
+            # shard that finished its share goes legitimately quiet
+            waiting = (
+                admitted[s] < len(globals_of[s])
+                or any(key[0] == s and key not in abandoned
+                       and not _stream_done(key) for key in expected))
+            if not waiting:
+                wait_since.pop(s, None)
+                continue
+            # the horizon starts when the shard last spoke OR when its
+            # current debt began, whichever is later — a shard that sat
+            # legitimately idle before being handed a retry is not late
+            since = wait_since.setdefault(s, fabric.ticks)
+            heard = fabric.ticks_since_heard(0, s)
+            waited = (fabric.ticks - t0_tick) if heard is None else heard
+            waited = min(waited, fabric.ticks - since)
+            if waited > suspect_after:
+                _mark_suspect(s)
+
     # the streamed tick pipeline
     t_serve0 = time.perf_counter()
     seen_first: set = set()  # stream keys that produced their first token
@@ -617,13 +831,15 @@ def serve_requests_streaming(
 
     def _pump() -> None:
         for ev in reader.feed(ingress.recv()):
+            key = (ev.src, ev.stream_id)
+            if key in abandoned:
+                continue  # stale chunks from a suspect shard's old stream
             if not ev.ok:
                 raise RuntimeError(
                     f"ingress: corrupt stream chunks from shard {ev.src}"
                 )
             tok_count[0] += len(ev.tokens)
             tok_count[1] += len(ev.tokens)
-            key = (ev.src, ev.stream_id)
             if ev.tokens and key not in seen_first:
                 seen_first.add(key)
                 ttft = time.perf_counter() - t_serve0
@@ -674,48 +890,63 @@ def serve_requests_streaming(
                 lane.feedback(st["p95"] if st else None)
 
     tick = 0
-    while any(b.pending or b.n_active for b in batchers.values()):
-        t_tick0 = trace.now_us() if trace is not None else 0.0
-        tok_count[1] = 0
-        tick += 1
-        if spans is not None:
-            spans.set_tick(tick)  # ingress was tick 0; the loop is 1..N
-        for b in batchers.values():
-            b.step_begin()  # dispatch compute; device runs in background
-        if overlap:
-            fabric.poll()  # reap last tick's chunks while decode runs
-            _pump()
-        for s, b in batchers.items():
-            for (k, j), pos, tok in b.step_finish():
-                writers[(s, k, j)].write((tok,), eos=(pos == max_new - 1))
-        for lane in lanes.values():
-            lane.flush()  # ONE burst per (shard, tenant) this tick
-        if overlap:
-            fabric.exchange_async()  # dispatch routing; overlap next tick
-        else:
-            fabric.exchange()
-            _pump()
-        if metrics is not None:
-            metrics.series("serve.tick.tokens").append(tok_count[1])
-        if trace is not None:
-            trace.complete("serve.tick", t_tick0,
-                           trace.now_us() - t_tick0, cat="serve",
-                           args={"tokens_arrived": tok_count[1]})
-
-    # drain: force out any bursts a clamped lane is still holding, then
-    # complete the in-flight tick and any stragglers
-    for lane in lanes.values():
-        lane.flush(force=True)
-    for _ in range(3):
-        if reader.all_eos(expected):
+    idle = 0
+    drain_cap = (deadline_ticks or 256) if arq else 3
+    force_flushed = False
+    while True:
+        active = any(b.pending or b.n_active for b in batchers.values())
+        awaiting = any(admitted[s] < len(globals_of[s])
+                       for s in shards if s not in suspects)
+        if not active and not awaiting and reader.all_eos(_live_expected()):
             break
         tick += 1
         if spans is not None:
-            spans.set_tick(tick)
-        fabric.exchange()
-        _pump()
-    if not reader.all_eos(expected):
-        raise RuntimeError("streaming serve: streams did not reach EOS")
+            spans.set_tick(tick)  # ingress was tick 0; the loop is 1..N
+        if active:
+            idle = 0
+            force_flushed = False
+            t_tick0 = trace.now_us() if trace is not None else 0.0
+            tok_count[1] = 0
+            for b in batchers.values():
+                b.step_begin()  # dispatch compute; device runs in background
+            if overlap:
+                fabric.poll()  # reap last tick's chunks while decode runs
+                _pump()
+            for s, b in list(batchers.items()):
+                for (k, j), pos, tok in b.step_finish():
+                    writers[(s, k, j)].write((tok,), eos=(pos == max_new - 1))
+            for lane in lanes.values():
+                lane.flush()  # ONE burst per (shard, tenant) this tick
+            if overlap:
+                fabric.exchange_async()  # dispatch routing; overlap next tick
+            else:
+                fabric.exchange()
+                _pump()
+            if metrics is not None:
+                metrics.series("serve.tick.tokens").append(tok_count[1])
+            if trace is not None:
+                trace.complete("serve.tick", t_tick0,
+                               trace.now_us() - t_tick0, cat="serve",
+                               args={"tokens_arrived": tok_count[1]})
+        else:
+            # nothing left to compute: force out any bursts a clamped
+            # lane still holds, then keep the fabric ticking so in-flight
+            # chunks, ARQ recovery traffic, and retried request wires land
+            if not force_flushed:
+                for lane in lanes.values():
+                    lane.flush(force=True)
+                force_flushed = True
+            idle += 1
+            if idle > drain_cap:
+                raise RuntimeError(
+                    "streaming serve: streams did not reach EOS")
+            fabric.exchange()
+            _pump()
+        if watch:
+            _check_suspects()
+            for s in shards:
+                if s not in suspects:
+                    _admit(s)
     if metrics is not None:
         dt = max(time.perf_counter() - t_serve0, 1e-9)
         metrics.gauge("serve.tokens_per_s").set(tok_count[0] / dt)
@@ -728,6 +959,8 @@ def serve_requests_streaming(
     # plane, so the result is byte-identical to serve_requests
     outs: Dict[Tuple[int, int], List[int]] = {}
     for (src, sid), st in reader.streams.items():
+        if (src, sid) in abandoned:
+            continue  # a retried request's dead first attempt
         m = globals_of[src][sid >> 16]
         outs[(m, sid & 0xFFFF)] = st.tokens
     responses = [
@@ -770,6 +1003,23 @@ def main() -> None:
                          "the opposite ring direction after its preferred "
                          "link has been credit-starved for this many "
                          "consecutive router steps (0 = static shortest)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="seeded deterministic fault injection on the serve "
+                         "fabric: 'drop=0.02,corrupt=0.01,...' (see "
+                         "repro.fabric.faults.parse_chaos); deterministic "
+                         "in --seed")
+    ap.add_argument("--no-arq", action="store_true",
+                    help="disable ARQ reliable delivery on the serve fabric "
+                         "(corruption is flagged, never recovered)")
+    ap.add_argument("--suspect-after", type=int, default=24,
+                    help="mark a shard suspect — and retry its in-flight "
+                         "requests on a healthy shard — after this many "
+                         "fabric ticks without hearing from it (needs ARQ; "
+                         "0 disables)")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="max fabric ticks to wait on in-flight deliveries "
+                         "before the serve gives up (default 256 with ARQ, "
+                         "3 without)")
     ap.add_argument("--backpressure-p95", type=float, default=None,
                     help="for --streaming: clamp a tenant lane's flush "
                          "rate while its QoS class's p95 arrive latency "
@@ -808,6 +1058,20 @@ def main() -> None:
         cfg = smoke_config(cfg)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
+    serve_fabric = None
+    if args.sharded or args.streaming:
+        from ..fabric import parse_chaos
+
+        faults = parse_chaos(args.chaos, args.seed) if args.chaos else None
+        serve_fabric = default_serve_fabric(
+            args.n_shards, routing=args.routing,
+            defect_after=args.defect_after, arq=not args.no_arq,
+            faults=faults)
+        if args.chaos and serve_fabric is None:
+            raise SystemExit("--chaos needs a multi-rank fabric "
+                             "(>= 2 visible devices)")
+    suspect_after = args.suspect_after if args.suspect_after > 0 else None
+
     rng = np.random.default_rng(args.seed)
     wires = []
     for r in range(args.n_requests):
@@ -829,22 +1093,26 @@ def main() -> None:
     elif args.streaming:
         resp_wires = serve_requests_streaming(
             params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
-            slots=args.slots, n_shards=args.n_shards,
+            slots=args.slots, n_shards=args.n_shards, fabric=serve_fabric,
             overlap=not args.no_overlap, routing=args.routing,
             defect_after=args.defect_after,
             backpressure_p95=args.backpressure_p95,
             metrics=metrics,
             trace=trace,
             spans=spans,
+            suspect_after=suspect_after,
+            deadline_ticks=args.deadline_ticks,
             on_token=lambda m, j, step, tok: first_tok_t.append(time.time())
             if not first_tok_t else None,
         )
     elif args.sharded:
         resp_wires = serve_requests_sharded(
             params, cfg, wires, max_new=args.max_new, pad_to=args.pad_to,
-            slots=args.slots, n_shards=args.n_shards, routing=args.routing,
-            defect_after=args.defect_after,
+            slots=args.slots, n_shards=args.n_shards, fabric=serve_fabric,
+            routing=args.routing, defect_after=args.defect_after,
             metrics=metrics, trace=trace,
+            suspect_after=suspect_after,
+            deadline_ticks=args.deadline_ticks,
         )
     else:
         resp_wires = serve_requests(

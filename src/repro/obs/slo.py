@@ -27,6 +27,11 @@ Built-in objectives:
 * ``drift_free`` — zero static-vs-observed load drift entries
   (``fabric.load_drift.entries`` gauge): every frame rode the link the
   analyzer predicted.
+* ``max_retransmit_ratio`` — ARQ recovery overhead upper bound:
+  ``fabric.arq.retransmits / max(1, fabric.frames.delivered)`` (both
+  counted in frames).  A zero-fault ARQ run measures 0.0; the delivered
+  counter must be present (an ARQ SLO over a run that never delivered a
+  frame fails as unobservable).
 * ``max:<flat-key>`` / ``min:<flat-key>`` — generic bound on any
   counter/gauge by its ``format_key`` name (also matches plain numeric
   dicts, e.g. bench ``LAST_METRICS``), so new metrics are gateable
@@ -43,7 +48,7 @@ from .metrics import format_key, quantile_from_buckets
 
 _BUILTIN = (
     "ttft_p95_s", "ttft_p99_s", "ttft_mean_s", "arrive_p95_steps",
-    "tokens_per_s_min", "drift_free",
+    "tokens_per_s_min", "drift_free", "max_retransmit_ratio",
 )
 
 
@@ -267,6 +272,17 @@ def evaluate_slo(
                     name, 0, drift, drift == 0,
                     None if drift == 0 else float("inf"),
                     "static-vs-observed link-load drift entries"))
+        elif name == "max_retransmit_ratio":
+            retx = _flat_value(snapshot, values, "fabric.arq.retransmits")
+            delivered = _flat_value(snapshot, values,
+                                    "fabric.frames.delivered")
+            ratio = (None if retx is None or delivered is None
+                     else retx / max(1.0, delivered))
+            upper(name, target, ratio,
+                  detail=("fabric.arq.retransmits / fabric.frames.delivered "
+                          "absent from snapshot — not an ARQ run?"
+                          if ratio is None else
+                          f"retransmits={retx:.0f} delivered={delivered:.0f}"))
         elif name.startswith("max:"):
             upper(name, target, _flat_value(snapshot, values, name[4:]))
         elif name.startswith("min:"):

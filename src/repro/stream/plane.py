@@ -239,9 +239,33 @@ class StreamState:
 
 
 class StreamReader:
-    """Demultiplexes chunk bursts into per-stream token sequences."""
+    """Demultiplexes chunk bursts into per-stream token sequences.
 
-    def __init__(self, metrics=None, spans=None) -> None:
+    ``on_corrupt`` picks the posture toward corrupt DELIVERIES (failed
+    CRC32 or unparseable burst):
+
+    * ``"flag"`` (default) — poison exactly the streams whose chunks rode
+      in the delivery (``StreamState.ok=False``), the PR-8 behavior;
+    * ``"raise"`` — raise ``RuntimeError`` the moment a corrupt delivery
+      is fed (stream state untouched by it);
+    * ``"retry"`` — skip the corrupt delivery WITHOUT touching stream
+      state, so a clean re-delivery (the fabric's ARQ replay, or the
+      serve plane's request retry) can land in its place; the skipped
+      chunks surface as a step gap only if no replacement ever arrives.
+
+    Stream-level damage the reader itself detects (a step gap or a chunk
+    after EOS) always flags the stream — those are reassembly facts, not
+    recoverable wire damage.
+    """
+
+    def __init__(self, metrics=None, spans=None,
+                 on_corrupt: str = "flag") -> None:
+        if on_corrupt not in ("flag", "raise", "retry"):
+            raise ValueError(
+                f"on_corrupt must be 'flag', 'raise' or 'retry', got "
+                f"{on_corrupt!r}"
+            )
+        self.on_corrupt = on_corrupt
         self.streams: Dict[Tuple[int, int], StreamState] = {}
         #: deliveries whose bursts yielded no parseable chunk at all —
         #: corruption that cannot be attributed to a stream
@@ -261,6 +285,19 @@ class StreamReader:
         for d in deliveries:
             chunks, parsed = decode_token_chunks(d.wire)
             clean = bool(d.ok) and parsed
+            if not clean and self.on_corrupt == "raise":
+                raise RuntimeError(
+                    f"corrupt stream delivery from src {d.src} (level "
+                    f"{d.list_level}): CRC failure or unparseable burst — "
+                    f"feed with on_corrupt='flag' to inspect"
+                )
+            if not clean and self.on_corrupt == "retry":
+                # drop it whole: a replayed/retried delivery carries the
+                # same chunks clean, and folding the damaged copy in now
+                # would poison the stream the replacement repairs
+                if m is not None:
+                    m.counter("stream.reader.skipped_corrupt").add(1)
+                continue
             if not chunks:
                 if not clean:
                     self.unattributed.append(d)

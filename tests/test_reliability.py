@@ -1,0 +1,475 @@
+"""Reliable delivery: ARQ retransmission under seeded chaos, corruption
+postures, failure-aware serving, and the static rules that keep the knob
+set coherent.
+
+The contract under test is the strong one: with ``FabricConfig(arq=True)``
+delivered messages are BYTE-IDENTICAL and in-order per (src, dst) stream
+even under seeded drop/corrupt/duplicate faults — on both tick engines —
+and a rank blackout makes a serve COMPLETE (suspect detection +
+re-placement) instead of hanging.  Runs on the 8 simulated host devices
+from ``conftest.py``."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.fabric import (
+    Fabric,
+    FabricConfig,
+    FabricCorruption,
+    FaultPlan,
+    SEQ_MOD,
+    parse_chaos,
+)
+from repro.fabric.frames import HDR_ROUTE
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _wires(rng, n, lo=10, hi=200):
+    return [bytes(map(int, rng.integers(0, 256, int(rng.integers(lo, hi)))))
+            for _ in range(n)]
+
+
+def _sends(wires):
+    """A fixed multi-pair, multi-frame workload over 8 ranks."""
+    pairs = [(0, 4), (0, 4), (1, 5), (3, 2), (6, 0), (0, 4), (7, 1)]
+    return [(s, d, wires[i % len(wires)], 1 + i % 3)
+            for i, (s, d) in enumerate(pairs)]
+
+
+def _deliver(fab, sends, max_ticks=300):
+    """Send everything, tick until every message landed (or give up),
+    return {(src, dst): [Delivery, ...]} in arrival order."""
+    for s, d, w, lvl in sends:
+        fab.send(s, d, w, list_level=lvl)
+    want = len(sends)
+    got = {}
+    n = 0
+    for _ in range(max_ticks):
+        fab.exchange()
+        for r in range(fab.n_ranks):
+            for d in fab.drain(r):
+                got.setdefault((d.src, r), []).append(d)
+                n += 1
+        if n >= want:
+            break
+    return got
+
+
+def _streams(got):
+    """Comparable view: per-stream ordered (wire, ok, level) tuples."""
+    return {k: [(d.wire, d.ok, d.list_level) for d in v]
+            for k, v in sorted(got.items())}
+
+
+def _counters(fab, prefix="fabric.arq."):
+    out = {}
+    for m in fab.metrics.snapshot()["metrics"]:
+        if m["type"] == "counter" and m["name"].startswith(prefix):
+            out[m["name"]] = out.get(m["name"], 0) + m["value"]
+    return out
+
+
+def _cfg(**kw):
+    kw.setdefault("frame_phits", 2)
+    kw.setdefault("credits", 2)
+    kw.setdefault("arq", True)
+    return FabricConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# ARQ byte-identity under seeded faults (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "programs"])
+@pytest.mark.parametrize(
+    "plan",
+    [
+        FaultPlan(seed=3, drop=0.08),
+        FaultPlan(seed=5, corrupt=0.08),
+        FaultPlan(seed=11, duplicate=0.3),
+        FaultPlan(seed=2, drop=0.05, corrupt=0.04, duplicate=0.1,
+                  reorder=0.5),
+    ],
+    ids=["drop", "corrupt", "duplicate", "mixed"],
+)
+def test_arq_identity_under_seeded_faults(rng, plan, fused):
+    wires = _wires(rng, 5)
+    sends = _sends(wires)
+    clean = _streams(_deliver(
+        Fabric(n_ranks=8, config=_cfg(fused=fused)), sends))
+    fab = Fabric(n_ranks=8, config=_cfg(fused=fused))
+    fab.faults = plan
+    faulty = _streams(_deliver(fab, sends))
+    # byte-identical, in-order per stream, every delivery clean
+    assert faulty == clean
+    assert all(ok for v in faulty.values() for _, ok, _ in v)
+
+
+def test_arq_shortest_and_dimension_routing(rng):
+    wires = _wires(rng, 4)
+    sends = _sends(wires)
+    plan = FaultPlan(seed=9, drop=0.06, corrupt=0.04)
+    for routing in ("shortest", "dimension"):
+        clean = _streams(_deliver(
+            Fabric(n_ranks=8, config=_cfg(routing=routing)), sends))
+        fab = Fabric(n_ranks=8, config=_cfg(routing=routing))
+        fab.faults = plan
+        assert _streams(_deliver(fab, sends)) == clean, routing
+
+
+def test_fused_vs_three_program_identical_under_same_faults(rng):
+    """One seeded FaultPlan, two tick engines: the post-fault frame lists
+    are planned host-side from pure (seed, tick, src, dst, seq) hashes, so
+    BOTH engines must see the identical fault sequence and deliver the
+    identical bytes."""
+    wires = _wires(rng, 5)
+    sends = _sends(wires)
+    plan = FaultPlan(seed=21, drop=0.07, corrupt=0.05, duplicate=0.15)
+    got = {}
+    for fused in (True, False):
+        fab = Fabric(n_ranks=8, config=_cfg(fused=fused))
+        fab.faults = plan
+        got[fused] = _streams(_deliver(fab, sends))
+    assert got[True] == got[False]
+
+
+def test_duplicate_storm_suppressed(rng):
+    """Every frame duplicated: deliveries stay exact (no doubled messages)
+    and the seq window visibly suppressed the copies."""
+    wires = _wires(rng, 3)
+    sends = _sends(wires)
+    clean = _streams(_deliver(Fabric(n_ranks=8, config=_cfg()), sends))
+    fab = Fabric(n_ranks=8, config=_cfg())
+    fab.faults = FaultPlan(seed=1, duplicate=1.0)
+    assert _streams(_deliver(fab, sends)) == clean
+    assert _counters(fab)["fabric.arq.dup_suppressed"] > 0
+
+
+def test_zero_fault_arq_is_invisible(rng):
+    """With no faults, arq=True delivers exactly what arq=False delivers,
+    and every recovery counter reads 0 (materialized, not absent — the
+    max_retransmit_ratio SLO needs the zeros)."""
+    wires = _wires(rng, 4)
+    sends = _sends(wires)
+    legacy = _streams(_deliver(
+        Fabric(n_ranks=8, config=_cfg(arq=False)), sends))
+    fab = Fabric(n_ranks=8, config=_cfg())
+    assert _streams(_deliver(fab, sends)) == legacy
+    ctr = _counters(fab)
+    for name in ("retransmits", "nacks", "timeouts", "dup_suppressed",
+                 "crc_dropped", "aborts", "evicted", "replays", "skips"):
+        assert ctr[f"fabric.arq.{name}"] == 0, (name, ctr)
+
+
+def test_arq_identity_property(rng):
+    """Property form: random seeds x fault rates, fused engine.  The
+    baseline is computed once (same sends every example)."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+
+    wires = _wires(rng, 4)
+    sends = _sends(wires)
+    clean = _streams(_deliver(Fabric(n_ranks=8, config=_cfg()), sends))
+
+    @hyp.settings(max_examples=8, deadline=None)
+    @hyp.given(
+        seed=st.integers(0, 2**31 - 1),
+        drop=st.floats(0.0, 0.12),
+        corrupt=st.floats(0.0, 0.1),
+        dup=st.floats(0.0, 0.25),
+    )
+    def prop(seed, drop, corrupt, dup):
+        fab = Fabric(n_ranks=8, config=_cfg())
+        fab.faults = FaultPlan(seed=seed, drop=drop, corrupt=corrupt,
+                               duplicate=dup)
+        faulty = _streams(_deliver(fab, sends))
+        assert faulty == clean
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# on_corrupt postures (fabric + stream reader)
+# ---------------------------------------------------------------------------
+
+
+def test_on_corrupt_flag_and_raise(rng):
+    """arq=False + 100% payload corruption: flag returns the damage,
+    raise refuses it with the inbox left intact."""
+    fab = Fabric(n_ranks=8, config=_cfg(arq=False))
+    fab.faults = FaultPlan(seed=4, corrupt=1.0)
+    fab.send(0, 4, bytes(rng.integers(0, 256, 64)))
+    fab.exchange()
+    with pytest.raises(FabricCorruption, match="corrupt deliveries"):
+        fab.drain(4, on_corrupt="raise")
+    got = fab.drain(4)  # inbox survived the raise
+    assert len(got) == 1 and not got[0].ok
+    with pytest.raises(ValueError, match="flag"):
+        fab.drain(4, on_corrupt="bogus")
+
+
+def test_on_corrupt_retry_needs_arq():
+    fab = Fabric(n_ranks=8, config=_cfg(arq=False))
+    with pytest.raises(ValueError, match="arq=True"):
+        fab.drain(0, on_corrupt="retry")
+
+
+def test_on_corrupt_retry_replays_from_sender_buffer(rng):
+    """A frame whose ORIGINAL seq is corrupted on every (re)transmit can
+    never be repaired by ARQ — the sender aborts, the receiver skips past
+    the gap and delivers the partial flagged.  drain(on_corrupt='retry')
+    then asks the sender to replay its buffered copy under a FRESH seq,
+    which the seq-keyed corruptor leaves alone, so the clean bytes arrive
+    a tick later."""
+    fab = Fabric(n_ranks=8, config=_cfg(
+        fused=False, retransmit_timeout=2, max_retries=1))
+    wire = bytes(map(int, rng.integers(0, 256, 100)))  # 4 frames
+
+    def corrupt_seq1(tx, tx_valid):
+        tx = np.array(tx)
+        for r in range(tx.shape[0]):
+            for t in range(tx.shape[1]):
+                if tx_valid[r, t] and (tx[r, t, HDR_ROUTE] & 0xFFFF) == 1:
+                    tx[r, t, HDR_ROUTE + 2] ^= 0x40
+        return tx
+
+    fab.tx_hook = corrupt_seq1
+    fab.send(0, 4, wire)
+    kept = []
+    for _ in range(40):
+        fab.exchange()
+        kept.extend(fab.drain(4, on_corrupt="retry"))
+        if kept and kept[-1].ok:
+            break
+    assert [d.ok for d in kept] == [True], kept
+    assert kept[0].wire == wire
+    ctr = _counters(fab)
+    assert ctr["fabric.arq.replays"] == 1
+    assert ctr["fabric.arq.aborts"] >= 1
+    assert ctr["fabric.arq.skips"] >= 1
+
+
+def test_stream_reader_on_corrupt_modes():
+    from repro.obs import MetricsRegistry
+    from repro.stream import StreamReader, TokenChunk, encode_chunk_burst
+
+    class D:  # a fabric Delivery stand-in
+        def __init__(self, wire, ok):
+            self.src, self.wire, self.ok, self.list_level = 1, wire, ok, 1
+            self.arrive_step = 0
+
+    clean = encode_chunk_burst([TokenChunk(7, 0, (1, 2), False)])
+    dirty = encode_chunk_burst([TokenChunk(7, 1, (3,), True)])
+
+    r = StreamReader()  # flag: the stream is poisoned but tokens kept
+    r.feed([D(clean, True), D(dirty, False)])
+    st = r.streams[(1, 7)]
+    assert not st.ok and st.tokens == [1, 2, 3]
+
+    r = StreamReader(on_corrupt="raise")
+    r.feed([D(clean, True)])
+    with pytest.raises(RuntimeError, match="corrupt stream delivery"):
+        r.feed([D(dirty, False)])
+
+    m = MetricsRegistry()
+    r = StreamReader(metrics=m, on_corrupt="retry")
+    r.feed([D(clean, True), D(dirty, False)])
+    st = r.streams[(1, 7)]
+    assert st.ok and st.tokens == [1, 2]  # damage skipped, stream healthy
+    assert r.feed([D(dirty, True)])  # the clean replay repairs the stream
+    assert r.streams[(1, 7)].eos
+    snap = {x["name"]: x["value"] for x in m.snapshot()["metrics"]
+            if x["type"] == "counter"}
+    assert snap["stream.reader.skipped_corrupt"] == 1
+    with pytest.raises(ValueError, match="flag"):
+        StreamReader(on_corrupt="bogus")
+
+
+# ---------------------------------------------------------------------------
+# chaos plan plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_chaos():
+    p = parse_chaos("drop=0.02,corrupt=0.01,blackout_rank=2,"
+                    "blackout_from=3,blackout_ticks=10", seed=7)
+    assert (p.seed, p.drop, p.corrupt) == (7, 0.02, 0.01)
+    assert (p.blackout_rank, p.blackout_from, p.blackout_ticks) == (2, 3, 10)
+    assert p.active
+    with pytest.raises(ValueError):
+        parse_chaos("warp_speed=1")
+    assert not FaultPlan(seed=0).active
+    assert FaultPlan(seed=0).with_seed(5).seed == 5
+
+
+def test_fault_plan_is_deterministic_per_seed(rng):
+    """Same seed = same fault decisions; different seed = (almost surely)
+    different ones.  The plan is stateless, so planning twice from the
+    same inputs must agree — that is what engine parity rests on."""
+    plan = FaultPlan(seed=13, drop=0.3, duplicate=0.3)
+    frames = [(0, 4, s, 0) for s in range(64)]  # (src, dst, seq, fidx)
+    a = plan.frame_ops(2, frames, dup_budget=8)
+    b = plan.frame_ops(2, frames, dup_budget=8)
+    assert a == b
+    c = plan.with_seed(14).frame_ops(2, frames, dup_budget=8)
+    assert a != c
+
+
+# ---------------------------------------------------------------------------
+# static rules: the knob set must be provably coherent
+# ---------------------------------------------------------------------------
+
+
+def test_arq_rules_fire():
+    from repro.analysis.rules import arq_config_findings
+
+    # seq-window ambiguity is an ERROR at construction, message shared
+    # verbatim with the analyzer
+    with pytest.raises(ValueError, match="seq window"):
+        _cfg(arq_buffer=SEQ_MOD // 2)
+    with pytest.raises(ValueError, match="retransmit_timeout"):
+        _cfg(retransmit_timeout=0)
+    # control-class starvation: class 255 % 2 = 1 earns floor(4*1/9) = 0
+    with pytest.raises(ValueError, match="control class"):
+        _cfg(credits=4, qos_weights=(8, 1))
+    with pytest.raises(ValueError, match="skip past a gap"):
+        _cfg(retransmit_timeout=8, arq_skip_after=8)
+    # suspect_after is serve-side, so it is analyzer-only
+    fs = arq_config_findings(retransmit_timeout=8, max_retries=4,
+                             suspect_after=8)
+    assert any(f.rule == "fabric-arq-timeout" for f in fs)
+    assert arq_config_findings(retransmit_timeout=8, max_retries=4,
+                               suspect_after=24) == []
+
+
+def test_arq_targets_in_strict_sweep():
+    """The shipped --strict sweep must actually exercise the ARQ rules:
+    the serve fabric and the faulty-link bench are analyzed with their
+    real arq knobs."""
+    from repro.analysis.targets import fabric_targets
+
+    arq_targets = [kw for _, kw in fabric_targets() if kw.get("arq")]
+    assert len(arq_targets) >= 2
+    assert any("suspect_after" in kw for kw in arq_targets)
+
+
+# ---------------------------------------------------------------------------
+# max_retransmit_ratio SLO
+# ---------------------------------------------------------------------------
+
+
+def _snap(**counters):
+    return {"schema": 1, "metrics": [
+        {"name": k, "type": "counter", "labels": {}, "value": v}
+        for k, v in counters.items()]}
+
+
+def test_max_retransmit_ratio_slo():
+    from repro.obs import evaluate_slo
+
+    ok = evaluate_slo("max_retransmit_ratio=0.1", _snap(**{
+        "fabric.arq.retransmits": 4, "fabric.frames.delivered": 100}))
+    assert ok.ok and ok.results[0].observed == pytest.approx(0.04)
+    bad = evaluate_slo("max_retransmit_ratio=0.01", _snap(**{
+        "fabric.arq.retransmits": 4, "fabric.frames.delivered": 100}))
+    assert not bad.ok and bad.results[0].burn_rate == pytest.approx(4.0)
+    # absent signal must FAIL, not silently pass
+    absent = evaluate_slo("max_retransmit_ratio=0.1", _snap())
+    assert not absent.ok and "absent" in absent.results[0].detail
+    # generic bounds still work next to it (regression for the dispatch)
+    both = evaluate_slo(
+        "max_retransmit_ratio=0.1,max:fabric.arq.aborts=0",
+        _snap(**{"fabric.arq.retransmits": 0, "fabric.frames.delivered": 10,
+                 "fabric.arq.aborts": 0}))
+    assert both.ok and len(both.results) == 2
+
+
+# ---------------------------------------------------------------------------
+# failure-aware serving (blackout completes; chaos stays byte-identical)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.launch.serve import encode_request, serve_requests
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    r = np.random.default_rng(0)
+    wires = [encode_request(i, [list(map(int, r.integers(2, cfg.vocab, 12)))
+                                for _ in range(2)])
+             for i in range(4)]
+    kw = dict(max_new=4, pad_to=8, slots=4)
+    base = serve_requests(params, cfg, wires, **kw)
+    return params, cfg, wires, kw, base
+
+
+def test_streaming_chaos_byte_identical(serve_setup):
+    from repro.launch.serve import default_serve_fabric, serve_requests_streaming
+
+    params, cfg, wires, kw, base = serve_setup
+    fab = default_serve_fabric(
+        3, faults=FaultPlan(seed=7, drop=0.05, corrupt=0.02))
+    got = serve_requests_streaming(params, cfg, wires, fabric=fab, **kw)
+    assert got == base
+    ctr = _counters(fab)
+    assert ctr["fabric.arq.aborts"] == 0
+
+
+def test_sharded_blackout_completes(serve_setup):
+    from repro.launch.serve import default_serve_fabric, serve_requests_sharded
+
+    params, cfg, wires, kw, base = serve_setup
+    # from=1 kills shard 2's RESPONSE leg (the sharded round trip is only
+    # ~2 ticks, so a later blackout would miss the exchange entirely)
+    plan = FaultPlan(seed=7, blackout_rank=2, blackout_from=1,
+                     blackout_ticks=1 << 20)
+    fab = default_serve_fabric(3, faults=plan)
+    got = serve_requests_sharded(params, cfg, wires, fabric=fab,
+                                 placement=[1, 2, 3, 2], suspect_after=8,
+                                 **kw)
+    assert got == base
+    ctr = _counters(fab, prefix="serve.")
+    assert ctr["serve.suspects"] >= 1 and ctr["serve.retries"] >= 1
+
+
+def test_streaming_blackout_completes_with_retry_spans(serve_setup):
+    from repro.launch.serve import default_serve_fabric, serve_requests_streaming
+    from repro.obs import SpanTracker
+
+    params, cfg, wires, kw, base = serve_setup
+    plan = FaultPlan(seed=7, blackout_rank=2, blackout_from=2,
+                     blackout_ticks=1 << 20)
+    fab = default_serve_fabric(3, faults=plan)
+    spans = SpanTracker()
+    got = serve_requests_streaming(params, cfg, wires, fabric=fab,
+                                   spans=spans, placement=[1, 2, 3, 2],
+                                   suspect_after=8, **kw)
+    assert got == base
+    retried = [s.rid for s in spans.requests()
+               if any(e.name == "serve.retry" for e in s.events)]
+    assert retried, "blackout recovery must leave serve.retry span events"
+
+
+def test_suspect_exhaustion_raises(serve_setup):
+    """When EVERY shard is dead (100% frame loss) the serve must fail
+    loudly — retry-once exhausted or no healthy shard left to place on —
+    instead of hanging until the heat death of the deadline."""
+    from repro.launch.serve import default_serve_fabric, serve_requests_sharded
+
+    params, cfg, wires, kw, base = serve_setup
+    fab = default_serve_fabric(2, faults=FaultPlan(seed=0, drop=1.0))
+    with pytest.raises((RuntimeError, ValueError)):
+        serve_requests_sharded(params, cfg, wires, fabric=fab,
+                               placement=[1, 1, 2, 2], suspect_after=8,
+                               deadline_ticks=64, **kw)
