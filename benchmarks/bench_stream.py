@@ -21,6 +21,14 @@ Measurements on the 8 simulated host devices:
 * **overlap on/off** — tokens/s of the streamed path with the synchronous
   tick vs the double-buffered ``exchange_async`` pipeline (fabric hops
   hiding behind decode steps).
+* **generated codec vs hand-rolled baseline** — the ``Stream<Bytes 4>``
+  chunk codec *generated* from the token-stream schema
+  (``core.stream_plans`` driving ``kernels.ops.encode_chunks_batch``)
+  against a frozen replica of the pre-refactor hand-rolled host assembly
+  riding the SAME Pallas pack kernel and pow2 bucketing.  Every shape is
+  asserted byte-identical between the two paths before timing; the
+  throughput ratio is the no-regression gate for moving the serve plane
+  onto the generated codec.
 * **QoS fairness sweep** — a saturating tenant and a light tenant share
   the 1 -> 0 multi-hop path; the table reports the router scan step at
   which the light tenant's stream completes under FIFO credits and under
@@ -270,6 +278,98 @@ def bench_overlap() -> Table:
     return t
 
 
+def bench_codec(repeats: int = 15) -> Table:
+    """Generated ``Stream<Bytes 4>`` SER pass vs the frozen hand-rolled
+    baseline it replaced — same Pallas ``encode_chunks_batch`` kernel,
+    same pow2 bucketing, byte-identical wires (asserted per shape before
+    timing).  The ratio row is the chunk-encode-throughput regression
+    gate for the schema-generated codec path."""
+    from repro.kernels.ops import encode_chunks_batch
+    from repro.stream import (
+        CHUNK_META_WORDS, FLAG_EOS, TokenChunk, decode_token_chunks,
+        encode_chunk_burst,
+    )
+    from repro.stream.chunks import check_chunk_tokens
+
+    def handrolled_burst(chunks):
+        # frozen replica of the pre-``Stream<T>`` hand-rolled host
+        # assembly (see git history of stream/chunks.py): identical pow2
+        # bucketing and Pallas pack call at elem_words=1
+        if not chunks:
+            return b""
+        B = len(chunks)
+        cap = max(max(len(c.tokens) for c in chunks), 1)
+        cap = 1 << (cap - 1).bit_length()
+        Bp = 1 << max(B - 1, 0).bit_length()
+        meta = np.zeros((Bp, CHUNK_META_WORDS), np.uint32)
+        toks = np.zeros((Bp, cap), np.uint32)
+        counts = np.zeros((Bp,), np.int32)
+        for i, c in enumerate(chunks):
+            check_chunk_tokens(len(c.tokens))
+            meta[i] = (c.stream_id, c.step, FLAG_EOS if c.eos else 0)
+            toks[i, : len(c.tokens)] = c.tokens
+            counts[i] = len(c.tokens)
+        rows = np.asarray(encode_chunks_batch(meta, toks, counts))[:B]
+        parts = []
+        for i in range(B):
+            n = int(counts[i])
+            parts.append(rows[i, : CHUNK_META_WORDS + n].tobytes())
+            parts.append(rows[i, -1:].tobytes())
+        return b"".join(parts)
+
+    t = Table("stream: generated codec vs hand-rolled baseline "
+              "(same Pallas pass)", [
+        "chunks x toks", "codec", "wire_KB", "s/pass", "chunks/s", "ratio",
+    ])
+    rng = np.random.default_rng(1801)
+    # serve-tick shapes: a smoke tick (8 live sequences x 4 tokens), a
+    # loaded tick, and a speculative/bulk tick
+    for B, n in ((8, 4), (32, 16), (64, 64)):
+        chunks = [
+            TokenChunk(
+                (i << 16) | (i % 3), i % 11,
+                tuple(int(x) for x in
+                      rng.integers(0, 1 << 32, n, dtype=np.uint64)),
+                eos=i % 5 == 0,
+            )
+            for i in range(B)
+        ]
+        wire = encode_chunk_burst(chunks)
+        assert wire == handrolled_burst(chunks), \
+            "generated codec diverged from the hand-rolled baseline"
+        back, ok = decode_token_chunks(wire)
+        assert ok and [
+            (c.stream_id, c.step, c.tokens, c.eos) for c in back
+        ] == [(c.stream_id, c.step, c.tokens, c.eos) for c in chunks]
+        # interleave the two codecs so CPU-frequency drift biases neither
+        pairs = (("hand-rolled", handrolled_burst),
+                 ("generated", encode_chunk_burst))
+        samples = {name: [] for name, _ in pairs}
+        for name, fn in pairs:
+            fn(chunks)  # warm the jit cache
+        for _ in range(repeats):
+            for name, fn in pairs:
+                t0 = time.perf_counter()
+                fn(chunks)
+                samples[name].append(time.perf_counter() - t0)
+        per_s = {
+            name: B / sorted(ts)[len(ts) // 2]
+            for name, ts in samples.items()
+        }
+        for name in ("hand-rolled", "generated"):
+            t.add(f"{B} x {n}", name, round(len(wire) / 1024, 2),
+                  round(B / per_s[name], 6), round(per_s[name], 1),
+                  round(per_s[name] / per_s["hand-rolled"], 3))
+        if (B, n) == (32, 16):  # the loaded-tick shape is the headline
+            LAST_METRICS["codec_generated_chunks_per_s"] = round(
+                per_s["generated"], 1)
+            LAST_METRICS["codec_handrolled_chunks_per_s"] = round(
+                per_s["hand-rolled"], 1)
+            LAST_METRICS["codec_throughput_ratio"] = round(
+                per_s["generated"] / per_s["hand-rolled"], 3)
+    return t
+
+
 def bench_qos() -> Table:
     from repro.stream import ChunkLane, StreamReader
 
@@ -375,8 +475,8 @@ def run() -> List[Table]:
     LAST_METRICS.clear()
     print("[bench_stream] streamed wires asserted bit-identical to the "
           "batched plane in every row", file=sys.stderr)
-    tables = [bench_ttft(), bench_routing(), bench_overlap(), bench_qos(),
-              bench_backpressure()]
+    tables = [bench_ttft(), bench_routing(), bench_overlap(), bench_codec(),
+              bench_qos(), bench_backpressure()]
     ttfts = {r[0]: r[3] for r in tables[0].rows}
     LAST_METRICS["ttft_whole_response"] = ttfts.get("whole-response")
     LAST_METRICS["ttft_streamed_overlap"] = ttfts.get("streamed+overlap")
@@ -390,6 +490,11 @@ def run() -> List[Table]:
           f"(p95 {LAST_METRICS['arrive_p95_spread_dimension']} -> "
           f"{LAST_METRICS['arrive_p95_spread_shortest']})",
           file=sys.stderr)
+    print(f"[bench_stream] schema-generated chunk codec: "
+          f"{LAST_METRICS['codec_generated_chunks_per_s']} chunks/s vs "
+          f"{LAST_METRICS['codec_handrolled_chunks_per_s']} hand-rolled "
+          f"({LAST_METRICS['codec_throughput_ratio']}x, byte-identical "
+          f"wires)", file=sys.stderr)
     print(f"[bench_stream] backpressure clamp (FIFO): light-tenant p95 "
           f"{LAST_METRICS['bp_light_p95_fifo_off']} -> "
           f"{LAST_METRICS['bp_light_p95_fifo_on']} router steps "

@@ -35,6 +35,7 @@ from .schema_passes import (
     WireBounds,
     analyze_plan_caps,
     analyze_schema,
+    analyze_stream_schema,
     message_wire_len,
     wire_bounds,
 )
@@ -45,7 +46,7 @@ __all__ = [
     "MAX_LIST_LEVEL", "fabric_config_findings", "list_level_error",
     "max_ranks_error",
     "WireBounds", "analyze_plan_caps", "analyze_schema",
-    "message_wire_len", "wire_bounds",
+    "analyze_stream_schema", "message_wire_len", "wire_bounds",
     # lazy (fabric-touching):
     "analyze_fabric", "analyze_fabric_values", "analyze_demand",
     "analyze_sends", "demand_link_loads", "bounds_from_loads",

@@ -18,12 +18,13 @@ from .comm import busiest_links, total_frames
 from .config_passes import analyze_model_config
 from .fabric_passes import analyze_demand, analyze_fabric_values
 from .findings import Report
-from .schema_passes import analyze_schema, wire_bounds
+from .schema_passes import analyze_schema, analyze_stream_schema, wire_bounds
 from .targets import (
     demand_targets,
     fabric_targets,
     model_config_targets,
     schema_targets,
+    stream_targets,
 )
 
 
@@ -44,6 +45,20 @@ def run_all(verbose: bool = False) -> Report:
             f"min {wb.min_frames(16)} frames @ 16 phits, "
             f"{len(fs)} finding(s)"
         )
+
+    for loc, schema in stream_targets():
+        fs = report.extend(analyze_stream_schema(schema, location=loc))
+        report.targets += 1
+        try:
+            from ..core.stream_plans import stream_plans
+
+            shapes = ", ".join(
+                f"{p}: {plan.n_leaves} leaves x {plan.elem_words} word(s)"
+                for p, plan in sorted(stream_plans(schema).items())
+            )
+        except Exception:
+            shapes = "no plan (see findings)"
+        lines.append(f"  stream {loc}: {shapes}; {len(fs)} finding(s)")
 
     for loc, kw in fabric_targets():
         fs = report.extend(analyze_fabric_values(location=loc, **kw))

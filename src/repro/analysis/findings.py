@@ -164,6 +164,16 @@ RULES: Dict[str, Rule] = {
              "stream ids fit the (request:u16 | prompt:u16) packing",
              "serve fewer than 2**16 requests (and prompts per request) "
              "per streaming call"),
+        Rule("stream-meta-budget", Severity.ERROR,
+             "fragment-meta bit budgets fit their u32 wire words",
+             "keep id_bits and step_bits in [1, 32] — stream_id, step, "
+             "and flags each ride exactly one u32 fragment-meta word"),
+        Rule("stream-elem-size", Severity.ERROR,
+             "stream elements are fixed-size and the largest fragment "
+             "stays u32 word-addressable",
+             "give the stream element a static wire size (no nested "
+             "containers) small enough that MAX_CHUNK_TOKENS elements "
+             "stay below 2**32 words"),
         # -- model configs --------------------------------------------------
         Rule("config-moe-topk", Severity.ERROR,
              "the MoE router's top-k never exceeds the expert count",

@@ -23,6 +23,7 @@ from ..core.idl import (
     ListT,
     Schema,
     SchemaError,
+    StreamT,
     StructRef,
     TypeNode,
     all_token_paths,
@@ -33,10 +34,16 @@ from ..core.schema_tree import (
     STACK_CAPACITY,
     build_rom,
 )
-from .findings import Finding, finding
+from ..core.stream_plans import (
+    STREAM_ID_BITS,
+    elem_size_error,
+    meta_budget_error,
+    stream_plans,
+)
+from .findings import Finding, Severity, finding
 from .rules import MAX_LIST_LEVEL
 
-_CONTAINER = (Array, ListT)
+_CONTAINER = (Array, ListT, StreamT)
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +190,59 @@ def analyze_schema(
 
     if caps is not None:
         fs.extend(analyze_plan_caps(schema, caps, location=loc))
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# typed-stream pass (core/stream_plans.py's runtime errors, statically)
+# ---------------------------------------------------------------------------
+
+
+def analyze_stream_schema(
+    schema: Schema,
+    location: Optional[str] = None,
+    *,
+    id_bits: int = 2 * STREAM_ID_BITS,
+    step_bits: int = STREAM_ID_BITS,
+) -> List[Finding]:
+    """Run the schema rules plus the ``stream-*`` rules over a schema
+    that declares ``Stream<T>`` nodes.
+
+    The stream checks wrap the exact functions the runtime raises with
+    (:func:`~repro.core.stream_plans.meta_budget_error`,
+    :func:`~repro.core.stream_plans.elem_size_error`), so a finding here
+    is word-for-word the ``SchemaError`` ``stream_plans`` /
+    ``StreamPlan`` would raise.  Also proves the serve plane's
+    ``(request:u16 | prompt:u16)`` id packing fits the plan's id budget
+    (rule ``stream-id-width``)."""
+    loc = location or schema.top
+    fs = analyze_schema(schema, location=loc)
+    if any(f.severity is Severity.ERROR for f in fs):
+        return fs  # the ROM below these checks would not even build
+
+    budget_err = meta_budget_error(id_bits, step_bits)
+    if budget_err is not None:
+        fs.append(finding("stream-meta-budget", loc, budget_err))
+        # fall back to the shipped budgets so the element checks still run
+        id_bits, step_bits = 2 * STREAM_ID_BITS, STREAM_ID_BITS
+    try:
+        plans = stream_plans(schema, id_bits=id_bits, step_bits=step_bits)
+    except SchemaError as e:
+        # non-fixed-size element, or element too wide for the plan ctor
+        fs.append(finding("stream-elem-size", loc, str(e)))
+        return fs
+
+    for path, plan in sorted(plans.items()):
+        size_err = elem_size_error(plan.elem_words)
+        if size_err is not None:  # unreachable today: the ctor re-checks
+            fs.append(finding("stream-elem-size", loc, f"{path}: {size_err}"))
+        if plan.id_bits < 2 * STREAM_ID_BITS:
+            fs.append(finding(
+                "stream-id-width", loc,
+                f"{path}: id budget of {plan.id_bits} bits cannot hold "
+                f"the serve plane's (request:u{STREAM_ID_BITS} | "
+                f"prompt:u{STREAM_ID_BITS}) stream-id packing",
+            ))
     return fs
 
 

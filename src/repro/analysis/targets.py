@@ -63,6 +63,23 @@ def schema_targets() -> List[Tuple[
     ]
 
 
+def stream_targets() -> List[Tuple[str, Schema]]:
+    """(location, schema) for every shipped ``Stream<T>`` declaration —
+    the generated token codec and the logprob side stream (both live in
+    ``stream/chunks.py`` as pure schema JSON)."""
+    from ..stream.chunks import (
+        LOGPROB_STREAM_SCHEMA_JSON,
+        TOKEN_STREAM_SCHEMA_JSON,
+    )
+
+    return [
+        ("stream.token_stream",
+         Schema.from_json(TOKEN_STREAM_SCHEMA_JSON)),
+        ("stream.logprob_stream",
+         Schema.from_json(LOGPROB_STREAM_SCHEMA_JSON)),
+    ]
+
+
 def fabric_targets() -> List[Tuple[str, dict]]:
     """(location, analyze_fabric_values kwargs) for every shipped fabric
     configuration: the serve default, the bench_fabric sweeps, and the
@@ -159,5 +176,6 @@ def model_config_targets() -> List[Tuple[str, object]]:
 
 
 def total_targets() -> int:
-    return (len(schema_targets()) + len(fabric_targets())
-            + len(demand_targets()) + len(model_config_targets()))
+    return (len(schema_targets()) + len(stream_targets())
+            + len(fabric_targets()) + len(demand_targets())
+            + len(model_config_targets()))

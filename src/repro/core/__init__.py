@@ -15,6 +15,7 @@ from .idl import (
     ListT,
     Schema,
     SchemaError,
+    StreamT,
     StructRef,
     all_token_paths,
 )
@@ -24,10 +25,20 @@ from .schema_tree import (
     KIND_BYTES,
     KIND_END,
     KIND_LIST,
+    KIND_STREAM,
+    STREAM_META_WORDS,
     SchemaROM,
     build_rom,
     build_tree,
     tree_depth,
+)
+from .stream_plans import (
+    Fragment,
+    StreamPlan,
+    decode_fragments,
+    encode_fragment,
+    encode_fragment_burst,
+    stream_plans,
 )
 from .tokens import (
     TOK_ARRAY_END,

@@ -5,11 +5,18 @@ Grammar (Fig. 5 of the paper)::
     schema    ::= { structName : structDef, ... }
     structDef ::= [ [fieldName, type], ... ]
     type      ::= ["Bytes", n] | ["Struct", structName]
-                | ["Array", type] | ["List", type]
+                | ["Array", type] | ["List", type] | ["Stream", type]
 
 The *central schema* is shared by sender and receiver.  A *client schema*
 (paper §III-C1, Fig. 7) assigns integer tags to token paths and is private to
 one DES module; multiple client schemas may exist for one central schema.
+
+``["Stream", t]`` extends the paper grammar: a List whose elements are
+emitted incrementally across ticks.  Each fragment on the wire carries
+``(stream_id, step, flags)`` metadata and keeps the §IV-B
+count-after-elements convention, so bursts of fragments still parse
+back-to-front.  Chunk codecs for streams are *generated* from the schema
+(see ``core.stream_plans``), never hand-written.
 """
 from __future__ import annotations
 
@@ -59,9 +66,21 @@ class ListT:
     elem: "TypeNode"
 
 
-TypeNode = Union[Bytes, StructRef, Array, ListT]
+@dataclass(frozen=True)
+class StreamT:
+    """``["Stream", t]`` — a List emitted incrementally across ticks.
 
-_CONTAINER = (Array, ListT)
+    Elements travel as chunk fragments tagged ``(stream_id, step, flags)``;
+    the element type must be fixed-size (no nested containers) so the chunk
+    codec can be generated with static bounds.
+    """
+
+    elem: "TypeNode"
+
+
+TypeNode = Union[Bytes, StructRef, Array, ListT, StreamT]
+
+_CONTAINER = (Array, ListT, StreamT)
 
 
 def parse_type(obj) -> TypeNode:
@@ -81,6 +100,8 @@ def parse_type(obj) -> TypeNode:
         return Array(parse_type(arg))
     if kind == "List":
         return ListT(parse_type(arg))
+    if kind == "Stream":
+        return StreamT(parse_type(arg))
     raise SchemaError(f"unknown type constructor {kind!r}")
 
 
@@ -93,6 +114,8 @@ def type_to_json(t: TypeNode):
         return ["Array", type_to_json(t.elem)]
     if isinstance(t, ListT):
         return ["List", type_to_json(t.elem)]
+    if isinstance(t, StreamT):
+        return ["Stream", type_to_json(t.elem)]
     raise SchemaError(f"not a type node: {t!r}")
 
 
@@ -189,7 +212,7 @@ class Schema:
         return t
 
     def max_depth(self) -> int:
-        """Maximum container (Array/List) nesting depth of the message."""
+        """Maximum container (Array/List/Stream) nesting depth of the message."""
 
         def depth_of(t: TypeNode) -> int:
             if isinstance(t, Bytes):

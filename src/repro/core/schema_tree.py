@@ -29,6 +29,7 @@ from .idl import (
     ListT,
     Schema,
     SchemaError,
+    StreamT,
     StructRef,
     TypeNode,
     ELEM,
@@ -41,8 +42,19 @@ KIND_BYTES = 0
 KIND_ARRAY = 1
 KIND_LIST = 2
 KIND_END = 3
+KIND_STREAM = 4
 
-KIND_NAMES = {KIND_BYTES: "Bytes", KIND_ARRAY: "Array", KIND_LIST: "List", KIND_END: "END"}
+KIND_NAMES = {
+    KIND_BYTES: "Bytes",
+    KIND_ARRAY: "Array",
+    KIND_LIST: "List",
+    KIND_END: "END",
+    KIND_STREAM: "Stream",
+}
+
+#: u32 words of per-fragment metadata a Stream node adds on the wire:
+#: ``(stream_id, step, flags)`` — see ``core.stream_plans``.
+STREAM_META_WORDS = 3
 
 #: wire width of an Array/List length field (paper: software SER "writes the
 #: number of elements"; we fix the count encoding at 4 little-endian bytes).
@@ -92,8 +104,13 @@ def build_tree(schema: Schema) -> List[TreeNode]:
             if not nodes:
                 raise SchemaError(f"struct {t.name!r} at {path!r} has no fields")
             return nodes
-        if isinstance(t, (Array, ListT)):
-            kind = KIND_ARRAY if isinstance(t, Array) else KIND_LIST
+        if isinstance(t, (Array, ListT, StreamT)):
+            if isinstance(t, Array):
+                kind = KIND_ARRAY
+            elif isinstance(t, ListT):
+                kind = KIND_LIST
+            else:
+                kind = KIND_STREAM
             # transformation 1: wrap non-struct element into a struct.  The
             # wrapped field keeps the container's `elem` path so tags resolve.
             children = expand(t.elem, f"{path}.{ELEM}")
@@ -118,7 +135,7 @@ def tree_depth(roots: List[TreeNode]) -> int:
     """Maximum container nesting depth (size needed for the context stack)."""
 
     def d(n: TreeNode) -> int:
-        if n.kind in (KIND_ARRAY, KIND_LIST):
+        if n.kind in (KIND_ARRAY, KIND_LIST, KIND_STREAM):
             return 1 + max((d(c) for c in n.children), default=0)
         return 0
 
@@ -182,6 +199,8 @@ class SchemaROM:
             "stack_capacity": STACK_CAPACITY,
             "max_token_bytes": self.max_token_bytes,
             "max_list_level": int(np.max(self.list_level, initial=0)),
+            "n_streams": int(np.sum(self.kind == KIND_STREAM)),
+            "stream_meta_words": STREAM_META_WORDS,
         }
 
     def describe(self) -> str:
@@ -233,7 +252,9 @@ def build_rom(schema: Schema, client: Optional[ClientSchema] = None) -> SchemaRO
     def annotate(group: List[TreeNode], d: int, ll: int) -> None:
         for nd in group:
             depth[nd.index] = d
-            if nd.kind == KIND_LIST:
+            # a Stream is an incremental List: it rides ListLevel-tagged
+            # lanes, so it counts toward the list level like a List does.
+            if nd.kind in (KIND_LIST, KIND_STREAM):
                 list_level[nd.index] = ll + 1
             else:
                 list_level[nd.index] = ll
@@ -249,13 +270,13 @@ def build_rom(schema: Schema, client: Optional[ClientSchema] = None) -> SchemaRO
         if nd.kind == KIND_BYTES:
             nbytes[i] = nd.nbytes
             tag[i] = client.tag_for(nd.path)
-        elif nd.kind in (KIND_ARRAY, KIND_LIST):
+        elif nd.kind in (KIND_ARRAY, KIND_LIST, KIND_STREAM):
             nbytes[i] = COUNT_BYTES
             child[i] = nd.children[0].index
             tag_start[i] = client.tag_for(f"{nd.path}.{START}")
             tag_end[i] = client.tag_for(f"{nd.path}.{END}")
-            if nd.kind == KIND_LIST:
-                emit_end[i] = 1  # lists always emit list-end
+            if nd.kind in (KIND_LIST, KIND_STREAM):
+                emit_end[i] = 1  # lists/streams always emit list-end (EOS)
             else:
                 emit_end[i] = int(tag_end[i] >= 0)  # arrays: only when tagged
         # END node: all defaults

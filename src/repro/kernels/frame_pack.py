@@ -124,21 +124,24 @@ def _chunk_kernel(meta_ref, tok_ref, cnt_ref, out_ref):
 
 def pack_chunks_batch(
     meta: jnp.ndarray,  # (B, 3) u32 — stream_id, step, flags per chunk
-    tokens: jnp.ndarray,  # (B, cap) u32 — pre-masked token words
-    counts: jnp.ndarray,  # (B, 1) u32 — true token count per chunk
+    tokens: jnp.ndarray,  # (B, capW) u32 — pre-masked element words
+    counts: jnp.ndarray,  # (B, 1) u32 — true element count per chunk
     *,
     block: int = 8,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Assemble B small token chunks into wire rows in one call.
+    """Assemble B small stream fragments into wire rows in one call.
 
-    The streaming plane emits ONE tiny chunk per live sequence per decode
-    tick; batching them through a single Pallas pass amortizes the SER
-    launch the same way ``pack_frames_batch`` does for whole messages.
-    Output rows are ``[stream_id, step, flags, tok0..tok_{cap-1}, count]``
+    The streaming plane emits ONE tiny fragment per live sequence per
+    decode tick; batching them through a single Pallas pass amortizes the
+    SER launch the same way ``pack_frames_batch`` does for whole messages.
+    Output rows are ``[stream_id, step, flags, w0..w_{capW-1}, count]``
     — the HW->SW List layout (count AFTER elements, §IV-B), so rows
-    trimmed to their live tokens concatenate into a burst the host parses
-    back-to-front.
+    trimmed to their live element words concatenate into a burst the host
+    parses back-to-front.  The kernel is width-generic: ``capW`` is
+    ``cap * elem_words`` for whatever element width the ``Stream<T>``
+    plan generated (see ``core.stream_plans``), and the trailing count
+    stays the element count.
     """
     B, cap = tokens.shape
     width = cap + meta.shape[1] + 1

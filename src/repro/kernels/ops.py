@@ -88,22 +88,29 @@ def decode_frames_batch(frames_u32, interpret: bool = True):
     return unpack_frames_batch(frames_u32, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("elem_words", "interpret"))
 def encode_chunks_batch(
     meta,  # (B, 3) int32/u32 — (stream_id, step, flags) per chunk
-    tokens,  # (B, cap) token ids, zero-padded past each chunk's count
-    counts,  # (B,) int32 true token counts
+    tokens,  # (B, cap*elem_words) element words, zero-padded past each count
+    counts,  # (B,) int32 true ELEMENT counts
+    elem_words: int = 1,
     interpret: bool = True,
 ):
-    """Small-chunk SER for the streaming plane: B token chunks -> B wire
-    rows ``[meta | tokens | count]`` (count after elements, §IV-B).
+    """Generated stream-fragment SER: B fragments -> B wire rows
+    ``[meta | element words | count]`` (count after elements, §IV-B).
 
-    Tail tokens beyond each chunk's count are masked to zero here, then the
+    This is the Pallas pack path driven by ``core.stream_plans``: the
+    plan's static ``elem_words`` (u32 words per element — 1 for the
+    classic ``Stream<Bytes 4>`` token chunks) scales the tail mask, and
+    the trailing count word stays the *element* count so bursts parse
+    back-to-front regardless of element width.  Tail words beyond each
+    fragment's ``count * elem_words`` are masked to zero here, then the
     Pallas ``pack_chunks_batch`` kernel assembles every row in one pass.
     """
     counts = jnp.asarray(counts, jnp.uint32)
     col = jnp.arange(tokens.shape[1], dtype=jnp.uint32)[None, :]
-    toks = jnp.where(col < counts[:, None], tokens.astype(jnp.uint32), 0)
+    nwords = counts[:, None] * jnp.uint32(elem_words)
+    toks = jnp.where(col < nwords, tokens.astype(jnp.uint32), 0)
     return pack_chunks_batch(
         jnp.asarray(meta), toks, counts[:, None], interpret=interpret
     )

@@ -514,6 +514,13 @@ def serve_requests_sharded(
 # composes the batched compute plane with repro.stream over repro.fabric
 # ---------------------------------------------------------------------------
 
+#: ListLevel reserved for the typed logprob side-stream when
+#: ``serve_requests_streaming(logprobs=True)`` — the ingress partitions
+#: deliveries between the token reader and the logprob reader by this tag,
+#: so tenant QoS levels must stay below it (254 itself stays clear of the
+#: fabric's ``FabricConfig.arq_level`` control class, 255)
+LOGPROB_STREAM_LEVEL = 254
+
 
 def serve_requests_streaming(
     params,
@@ -541,6 +548,8 @@ def serve_requests_streaming(
     spans=None,
     suspect_after: Optional[int] = 24,
     deadline_ticks: Optional[int] = None,
+    logprobs: bool = False,
+    on_logprob=None,
 ) -> List[bytes]:
     """Answer N request wires with token-level streamed responses.
 
@@ -623,8 +632,21 @@ def serve_requests_streaming(
     ``deadline_ticks`` fabric ticks (default 256 with ARQ; the legacy 3
     without) before declaring the missing streams lost.
     ``suspect_after=None`` disables the detector.
+
+    ``logprobs=True`` attaches the *second typed stream*: per-token
+    logprobs as the schema-declared ``Stream<Struct{tok, logprob}>``
+    (``stream.chunks.LOGPROB_STREAM_SCHEMA_JSON``), generated by
+    ``core.stream_plans`` with no hand-written codec.  Each shard runs
+    one extra ``ChunkLane`` on the reserved :data:`LOGPROB_STREAM_LEVEL`
+    ListLevel carrying ``(token, float32-bit-pattern)`` elements, and the
+    ingress demultiplexes it through a second plan-parametric
+    ``StreamReader``.  ``on_logprob(req_idx, prompt_idx, step, token,
+    logprob)`` fires per element.  The greedy pick is computed exactly as
+    without logprobs, so tokens — and the returned wires — are
+    byte-identical with or without the extra stream attached (CI gates
+    on this).
     """
-    from ..stream import ChunkLane, StreamReader
+    from ..stream import ChunkLane, StreamReader, logprob_stream_plan
 
     if fabric is None:
         fabric = default_serve_fabric(n_shards, routing=routing,
@@ -659,6 +681,11 @@ def serve_requests_streaming(
             weights=[len(p) for _, p in reqs],
         )
     levels = list(qos_levels) if qos_levels is not None else [1] * len(wires)
+    if logprobs and any(lvl >= LOGPROB_STREAM_LEVEL for lvl in levels):
+        raise ValueError(
+            f"qos_levels must stay below the reserved logprob stream "
+            f"level {LOGPROB_STREAM_LEVEL} when logprobs=True"
+        )
 
     # ingress -> shards: mint one span per request at tick 0 and route the
     # raw request wires, each tagged with its request id so every fabric
@@ -695,6 +722,17 @@ def serve_requests_streaming(
     # re-place the request instead of poisoning the stream
     reader = StreamReader(metrics=metrics, spans=spans,
                           on_corrupt="retry" if arq else "flag")
+    # second typed stream: the schema-declared logprob plan gets its own
+    # reader (streams are keyed (src, stream_id) per reader; the reserved
+    # ListLevel partitions deliveries between the two planes).  Span
+    # accounting stays on the token reader — one open-stream count per
+    # request, not two.
+    lp_reader = (
+        StreamReader(metrics=metrics, plan=logprob_stream_plan(),
+                     on_corrupt="retry" if arq else "flag")
+        if logprobs else None
+    )
+    lp_writers: Dict[Tuple[int, int, int], object] = {}
     open_streams: Dict[int, int] = {}  # rid -> streams not yet at EOS
     admitted = {s: 0 for s in shards}  # request wires admitted at s
     suspects: set = set()
@@ -717,7 +755,7 @@ def serve_requests_streaming(
         batcher = batchers.get(s)
         if batcher is None:
             batcher = ContinuousBatcher(params, cfg, sched, metrics=metrics,
-                                        spans=spans)
+                                        spans=spans, logprobs=logprobs)
             batchers[s] = batcher
         for d, (_, prompts) in zip(arrived, local_reqs):
             k = admitted[s]
@@ -732,11 +770,19 @@ def serve_requests_streaming(
                           metrics=metrics),
             )
             lane.spans = spans
+            if logprobs:
+                lp_lane = lanes.setdefault(
+                    (s, LOGPROB_STREAM_LEVEL),
+                    ChunkLane(box, 0, list_level=LOGPROB_STREAM_LEVEL,
+                              plan=logprob_stream_plan(), metrics=metrics),
+                )
             rid = d.request_id if spans is not None else None
             for j, p in enumerate(prompts):
                 batcher.submit((k, j), p)
                 sid = (k << 16) | j
                 writers[(s, k, j)] = lane.writer(sid)
+                if logprobs:
+                    lp_writers[(s, k, j)] = lp_lane.writer(sid)
                 expected.append((s, sid))
                 if rid is not None:
                     batcher.span_of[(k, j)] = rid
@@ -766,6 +812,8 @@ def serve_requests_streaming(
             del lanes[key]
         for key in [k for k in writers if k[0] == s]:
             del writers[key]
+        for key in [k for k in lp_writers if k[0] == s]:
+            del lp_writers[key]
         # the fabric registry is always on (and IS `metrics` when one was
         # passed), so recovery stays observable either way
         fabric.metrics.counter("serve.suspects").add(1)
@@ -830,7 +878,27 @@ def serve_requests_streaming(
     tok_count = [0, 0]  # [total tokens arrived, tokens this tick]
 
     def _pump() -> None:
-        for ev in reader.feed(ingress.recv()):
+        got = ingress.recv()
+        if lp_reader is not None:
+            # the reserved ListLevel partitions the two typed streams
+            lp_got = [d for d in got if d.list_level == LOGPROB_STREAM_LEVEL]
+            got = [d for d in got if d.list_level != LOGPROB_STREAM_LEVEL]
+            for ev in lp_reader.feed(lp_got):
+                key = (ev.src, ev.stream_id)
+                if key in abandoned:
+                    continue  # stale side-stream of a retried request
+                if not ev.ok:
+                    raise RuntimeError(
+                        f"ingress: corrupt logprob stream chunks from "
+                        f"shard {ev.src}"
+                    )
+                if on_logprob is not None:
+                    k, j = ev.stream_id >> 16, ev.stream_id & 0xFFFF
+                    m = globals_of[ev.src][k]
+                    for t, (tok, bits) in enumerate(ev.tokens):
+                        lpv = float(np.uint32(bits).view(np.float32))
+                        on_logprob(m, j, ev.step + t, int(tok), lpv)
+        for ev in reader.feed(got):
             key = (ev.src, ev.stream_id)
             if key in abandoned:
                 continue  # stale chunks from a suspect shard's old stream
@@ -897,7 +965,10 @@ def serve_requests_streaming(
         active = any(b.pending or b.n_active for b in batchers.values())
         awaiting = any(admitted[s] < len(globals_of[s])
                        for s in shards if s not in suspects)
-        if not active and not awaiting and reader.all_eos(_live_expected()):
+        if (not active and not awaiting
+                and reader.all_eos(_live_expected())
+                and (lp_reader is None
+                     or lp_reader.all_eos(_live_expected()))):
             break
         tick += 1
         if spans is not None:
@@ -914,7 +985,15 @@ def serve_requests_streaming(
                 _pump()
             for s, b in list(batchers.items()):
                 for (k, j), pos, tok in b.step_finish():
-                    writers[(s, k, j)].write((tok,), eos=(pos == max_new - 1))
+                    eos = pos == max_new - 1
+                    writers[(s, k, j)].write((tok,), eos=eos)
+                    if logprobs:
+                        # the logprob element is (tok, float32 bit
+                        # pattern) — the schema's Struct{tok, logprob}
+                        bits = int(np.float32(
+                            b.tick_logprobs[((k, j), pos)]
+                        ).view(np.uint32))
+                        lp_writers[(s, k, j)].write(((tok, bits),), eos=eos)
             for lane in lanes.values():
                 lane.flush()  # ONE burst per (shard, tenant) this tick
             if overlap:
@@ -990,6 +1069,11 @@ def main() -> None:
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the async fabric/compute overlap pipeline "
                          "for --streaming")
+    ap.add_argument("--logprobs", action="store_true",
+                    help="for --streaming: attach the typed logprob "
+                         "side-stream (Stream<Struct{tok, logprob}> from "
+                         "schema JSON); tokens are byte-identical either "
+                         "way")
     ap.add_argument("--n-shards", type=int, default=None,
                     help="serving shards for --sharded/--streaming "
                          "(default: devices-1)")
@@ -1084,6 +1168,7 @@ def main() -> None:
     print(f"[serve] {len(wires)} request wires, {total_b} bytes total")
     t0 = time.time()
     first_tok_t = []
+    lp_events = []
     if args.sequential:
         resp_wires = [
             serve_request(params, cfg, w, max_new=args.max_new,
@@ -1102,6 +1187,11 @@ def main() -> None:
             spans=spans,
             suspect_after=suspect_after,
             deadline_ticks=args.deadline_ticks,
+            logprobs=args.logprobs,
+            on_logprob=(
+                (lambda m, j, step, tok, lp: lp_events.append((tok, lp)))
+                if args.logprobs else None
+            ),
             on_token=lambda m, j, step, tok: first_tok_t.append(time.time())
             if not first_tok_t else None,
         )
@@ -1133,6 +1223,10 @@ def main() -> None:
     if first_tok_t:
         print(f"[serve] time-to-first-token {first_tok_t[0] - t0:.3f}s "
               f"(vs {dt:.2f}s total)")
+    if lp_events:
+        tok, lp = lp_events[0]
+        print(f"[serve] logprob side-stream: {len(lp_events)} events "
+              f"(first tok={tok}, lp={lp:.4f})")
     if args.metrics_json and metrics is not None:
         import json as _json
 

@@ -49,20 +49,40 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, lr_fn=None,
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, cache_len: Optional[int] = None):
+def _greedy_with_logprob(logits: jnp.ndarray):
+    """Greedy pick + the chosen token's log-probability.
+
+    The argmax is computed exactly as in the logprob-free path, so
+    enabling logprobs can never change which token is served.
+    """
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok_lp = jnp.take_along_axis(logp, next_tok[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+    return next_tok, tok_lp
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: Optional[int] = None,
+                      logprobs: bool = False):
     def prefill_step(params: PyTree, batch: Dict):
         # last_only: serving prefill needs next-token logits, not (B, S, V)
         logits, cache = prefill(params, cfg, batch, cache_len=cache_len,
                                 last_only=True)
+        if logprobs:
+            next_tok, tok_lp = _greedy_with_logprob(logits[:, -1:])
+            return next_tok, tok_lp, cache
         next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         return next_tok, cache
 
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, logprobs: bool = False):
     def serve_step(params: PyTree, cache: Dict, tokens: jnp.ndarray):
         logits, cache = decode_step(params, cfg, cache, tokens)
+        if logprobs:
+            next_tok, tok_lp = _greedy_with_logprob(logits)
+            return next_tok, tok_lp, cache
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, cache
 
@@ -78,20 +98,26 @@ def make_serve_step(cfg: ModelConfig):
 _SERVE_STEP_CACHE: Dict[Tuple, Tuple] = {}
 
 
-def cached_serve_steps(cfg: ModelConfig, cache_len: int):
-    """(jitted prefill_step, jitted serve_step) memoized on (cfg, cache_len).
+def cached_serve_steps(cfg: ModelConfig, cache_len: int,
+                       logprobs: bool = False):
+    """(jitted prefill_step, jitted serve_step) memoized on
+    (cfg, cache_len, logprobs).
 
     ModelConfig is a frozen dataclass, so it keys the cache directly; jit
     then dedupes further by input shapes.  The decode step donates its cache
     argument — the scheduler rebinds the cache every tick, so the input
     buffer is dead after the call and donating it avoids holding two full
-    slot caches at once.
+    slot caches at once.  With ``logprobs=True`` the steps additionally
+    return the chosen token's log-probability (feeding the typed logprob
+    stream); the greedy pick itself is unchanged.
     """
-    key = (cfg, cache_len)
+    key = (cfg, cache_len, logprobs)
     if key not in _SERVE_STEP_CACHE:
         _SERVE_STEP_CACHE[key] = (
-            jax.jit(make_prefill_step(cfg, cache_len=cache_len)),
-            jax.jit(make_serve_step(cfg), donate_argnums=(1,)),
+            jax.jit(make_prefill_step(cfg, cache_len=cache_len,
+                                      logprobs=logprobs)),
+            jax.jit(make_serve_step(cfg, logprobs=logprobs),
+                    donate_argnums=(1,)),
         )
     return _SERVE_STEP_CACHE[key]
 

@@ -98,11 +98,18 @@ def _scatter_rows(cache: PyTree, cur_tok: jnp.ndarray, new_cache: PyTree,
     return cache, cur_tok
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_vec(vec: jnp.ndarray, new: jnp.ndarray, slot_ids: jnp.ndarray):
+    """Slot-scatter for the per-slot logprob column (same drop rule)."""
+    return vec.at[slot_ids].set(new.astype(vec.dtype), mode="drop")
+
+
 class ContinuousBatcher:
     """Admit/decode/evict loop over a fixed-slot KV cache."""
 
     def __init__(self, params: PyTree, cfg: ModelConfig,
-                 sched: SchedulerConfig, metrics=None, spans=None):
+                 sched: SchedulerConfig, metrics=None, spans=None,
+                 logprobs: bool = False):
         from ..launch.steps import cached_serve_steps
 
         self.params = params
@@ -115,20 +122,31 @@ class ContinuousBatcher:
         #: :attr:`span_of` get "batcher.admit"/"batcher.evict" arc points
         self.spans = spans
         self.span_of: Dict[Hashable, int] = {}
+        #: when True the steps also return the chosen token's logprob,
+        #: surfaced per tick in :attr:`tick_logprobs` (the greedy pick is
+        #: unchanged — token output is byte-identical either way)
+        self.logprobs = logprobs
         self.prefill_step, self.decode_step = cached_serve_steps(
-            cfg, cache_len=sched.cache_len
+            cfg, cache_len=sched.cache_len, logprobs=logprobs
         )
         # The slot cache must be row-compatible with what prefill emits —
         # families can grow it beyond prompt_cap + max_new (e.g. vlm KV
         # includes the vision prefix) — so allocate it from prefill's
-        # eval_shape with the batch dim widened to `slots`.
-        _, cache_spec = jax.eval_shape(
+        # eval_shape with the batch dim widened to `slots`.  The cache is
+        # the last output either way (tok[, lp], cache).
+        out_spec = jax.eval_shape(
             self.prefill_step, params, self._batch_specs(sched.admit_width)
         )
+        cache_spec = out_spec[-1]
         self.cache = jax.tree.map(
             lambda s: jnp.zeros((sched.slots,) + s.shape[1:], s.dtype), cache_spec
         )
         self.cur_tok = jnp.zeros((sched.slots, 1), jnp.int32)
+        self.cur_lp = jnp.zeros((sched.slots, 1), jnp.float32)
+        #: (seq_id, position) -> logprob of every emission of the last tick
+        #: (only filled when ``logprobs=True``); the step_finish triple API
+        #: is unchanged so logprob-free callers never pay for it
+        self.tick_logprobs: Dict[Tuple[Hashable, int], float] = {}
         # static non-token model inputs (vision/audio placeholders) are
         # allocated once, not per admit tick
         self._extra_inputs = {
@@ -180,7 +198,11 @@ class ContinuousBatcher:
             toks[j, : min(len(seq.tokens), S)] = seq.tokens[:S]
         batch = dict(self._extra_inputs)
         batch["tokens"] = jnp.asarray(toks)
-        next_tok, new_cache = self.prefill_step(self.params, batch)
+        if self.logprobs:
+            next_tok, next_lp, new_cache = self.prefill_step(self.params, batch)
+        else:
+            next_tok, new_cache = self.prefill_step(self.params, batch)
+            next_lp = None
         # unused admit rows -> OOB slot id, dropped by the scatter
         slot_ids = np.full(A, self.sched.slots, np.int32)
         slot_ids[:take] = free[:take]
@@ -188,11 +210,18 @@ class ContinuousBatcher:
             self.cache, self.cur_tok, new_cache, next_tok, jnp.asarray(slot_ids)
         )
         first = np.asarray(next_tok)[:take, 0]
+        if next_lp is not None:
+            self.cur_lp = _scatter_vec(
+                self.cur_lp, next_lp, jnp.asarray(slot_ids)
+            )
+            first_lp = np.asarray(next_lp)[:take, 0]
         for j, seq in enumerate(seqs):
             seq.out.append(int(first[j]))
             seq.remaining = self.sched.max_new - 1
             self.active[free[j]] = seq
             self._tick_emit.append((seq.seq_id, 0, int(first[j])))
+            if next_lp is not None:
+                self.tick_logprobs[(seq.seq_id, 0)] = float(first_lp[j])
             if self.spans is not None and seq.seq_id in self.span_of:
                 self.spans.event(self.span_of[seq.seq_id], "batcher.admit",
                                  slot=free[j])
@@ -222,6 +251,7 @@ class ContinuousBatcher:
         step was dispatched.  Must be paired with :meth:`step_finish`.
         """
         self._tick_emit = []
+        self.tick_logprobs = {}
         self._admit()
         if self.metrics is not None:
             self.metrics.gauge("batcher.occupancy").set(self.n_active)
@@ -229,9 +259,14 @@ class ContinuousBatcher:
         if self.n_active == 0:
             self._stepped = False
             return False
-        self.cur_tok, self.cache = self.decode_step(
-            self.params, self.cache, self.cur_tok
-        )
+        if self.logprobs:
+            self.cur_tok, self.cur_lp, self.cache = self.decode_step(
+                self.params, self.cache, self.cur_tok
+            )
+        else:
+            self.cur_tok, self.cache = self.decode_step(
+                self.params, self.cache, self.cur_tok
+            )
         self.steps_run += 1
         self._stepped = True
         if self.metrics is not None:
@@ -250,11 +285,15 @@ class ContinuousBatcher:
             return emitted
         self._stepped = False
         toks = np.asarray(self.cur_tok)[:, 0]  # one host sync per tick
+        lps = np.asarray(self.cur_lp)[:, 0] if self.logprobs else None
         for i, seq in enumerate(self.active):
             if seq is not None:
                 seq.out.append(int(toks[i]))
                 seq.remaining -= 1
-                emitted.append((seq.seq_id, len(seq.out) - 1, int(toks[i])))
+                pos = len(seq.out) - 1
+                emitted.append((seq.seq_id, pos, int(toks[i])))
+                if lps is not None:
+                    self.tick_logprobs[(seq.seq_id, pos)] = float(lps[i])
         self._evict()
         return emitted
 

@@ -9,14 +9,16 @@ the ingress (``plane.py``).
 
 Layers:
 
-* ``chunks`` — the chunk wire format (``encode_token_chunk`` /
-  ``encode_chunk_burst`` / ``decode_token_chunks``): count-after-elements
-  List fragments with stream ids, step numbers, and explicit end-of-stream
+* ``chunks`` — the token-chunk codec, *generated* from its ``Stream<T>``
+  schema declaration (``core.stream_plans``): count-after-elements List
+  fragments with stream ids, step numbers, and explicit end-of-stream
   terminators; bursts serialize through the batched Pallas small-chunk
-  kernel.
+  kernel.  New streamed payloads (e.g. the shipped logprob stream) are
+  declared purely in schema JSON — no hand-written codec.
 * ``plane``  — ``StreamWriter``/``ChunkLane`` on the shard side (one fabric
   message per tenant per tick), ``StreamReader`` at the ingress (ordering,
-  per-stream corruption flags, EOS tracking).
+  per-stream corruption flags, EOS tracking).  Both take a generated
+  ``plan=`` to carry any typed stream; the default is the token plan.
 
 The serve driver that ties this to compute — overlapped
 ``Fabric.exchange_async`` ticks against ``ContinuousBatcher`` steps, QoS
@@ -25,11 +27,16 @@ credit classes per tenant — is ``launch.serve.serve_requests_streaming``.
 from .chunks import (
     CHUNK_META_WORDS,
     FLAG_EOS,
+    LOGPROB_STREAM_SCHEMA_JSON,
     MAX_CHUNK_TOKENS,
+    STREAM_ID_BITS,
+    TOKEN_STREAM_SCHEMA_JSON,
     TokenChunk,
     decode_token_chunks,
     encode_chunk_burst,
     encode_token_chunk,
+    logprob_stream_plan,
+    token_stream_plan,
 )
 from .plane import (
     ChunkLane,
@@ -41,8 +48,10 @@ from .plane import (
 )
 
 __all__ = [
-    "CHUNK_META_WORDS", "FLAG_EOS", "MAX_CHUNK_TOKENS", "TokenChunk",
+    "CHUNK_META_WORDS", "FLAG_EOS", "MAX_CHUNK_TOKENS", "STREAM_ID_BITS",
+    "TOKEN_STREAM_SCHEMA_JSON", "LOGPROB_STREAM_SCHEMA_JSON", "TokenChunk",
     "decode_token_chunks", "encode_chunk_burst", "encode_token_chunk",
+    "logprob_stream_plan", "token_stream_plan",
     "ChunkLane", "StreamEvent", "StreamReader", "StreamState", "StreamWriter",
     "arrive_stats",
 ]

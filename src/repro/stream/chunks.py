@@ -1,4 +1,4 @@
-"""Token-chunk wire format for the streaming message plane.
+"""Token-chunk wire format — the first *generated* ``Stream<T>`` codec.
 
 HGum's claim is that a large List streams through the SER/DES incrementally
 — nobody buffers the whole message.  Applied to serving, a response is a
@@ -7,6 +7,15 @@ the shard should emit each decode step's tokens the tick they are produced
 instead of buffering the whole ``response_schema`` wire.  The unit of that
 stream is a *token chunk*: one decode step's tokens for one sequence,
 serialized as an incremental HGum List fragment.
+
+This module used to be a hand-rolled one-off wire format riding beside the
+schema-driven core.  It is now the first generated instance of the
+``["Stream", t]`` IDL node: the token stream is *declared* as schema JSON
+(:data:`TOKEN_STREAM_SCHEMA_JSON`, a ``Stream<Bytes 4>``), compiled through
+the schema ROM into a ``core.stream_plans.StreamPlan``, and every public
+function below delegates to the generated codec.  The wire format is
+byte-for-byte identical to the pre-refactor hand-rolled one (regression:
+``tests/golden/token_chunks.bin``).
 
 Chunk layout (u32 words, HW->SW List convention — the count comes AFTER
 the elements, paper §IV-B, so the host parses from the end)::
@@ -31,61 +40,114 @@ batched Pallas pass (``kernels.ops.encode_chunks_batch``).
 Ordering and integrity ride the layers below: the fabric's route-word seq
 numbers order the bursts per (src, dst) stream, the per-frame CRC32 flags
 corruption per message, and ``stream.plane.StreamReader`` turns both into
-per-stream corruption flags.
+per-stream corruption flags.  Fragment metadata that violates the plan's
+declared bit budgets (e.g. a step past the u16 step budget, or unknown
+flag bits) additionally sets the per-chunk :attr:`TokenChunk.corrupt`
+flag rather than silently attributing tokens to a garbage stream.
+
+Declaring a *new* streamed payload needs no codec code at all — see
+:data:`LOGPROB_STREAM_SCHEMA_JSON` (per-token logprobs as
+``Stream<Struct{tok, logprob}>``) and ``examples/typed_streams.py``.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import List, Sequence, Tuple
 
-import numpy as np
+from ..core.idl import Schema
+from ..core.stream_plans import (
+    CHUNK_META_WORDS,
+    CHUNK_MIN_WORDS,
+    FLAG_EOS,
+    MAX_CHUNK_TOKENS,
+    STREAM_ID_BITS,
+    StreamPlan,
+    check_chunk_tokens,
+    decode_fragments,
+    encode_fragment,
+    encode_fragment_burst,
+    stream_plans,
+)
 
-#: words before the token run: stream_id, step, flags
-CHUNK_META_WORDS = 3
-#: smallest legal chunk: meta words + the trailing count
-CHUNK_MIN_WORDS = CHUNK_META_WORDS + 1
-#: flags bit 0 — end-of-stream terminator
-FLAG_EOS = 1
-#: sanity bound used by the back-to-front parser (a corrupt count word must
-#: not send the cursor to a plausible-looking but wrong chunk boundary)
-MAX_CHUNK_TOKENS = 1 << 16
-#: stream ids pack (local_request:u16 | prompt_index:u16) — the analyzer's
-#: stream-id-width rule checks serve calls against this budget
-STREAM_ID_BITS = 16
+__all__ = [
+    "CHUNK_META_WORDS",
+    "CHUNK_MIN_WORDS",
+    "FLAG_EOS",
+    "MAX_CHUNK_TOKENS",
+    "STREAM_ID_BITS",
+    "TOKEN_STREAM_SCHEMA_JSON",
+    "LOGPROB_STREAM_SCHEMA_JSON",
+    "TokenChunk",
+    "check_chunk_tokens",
+    "decode_token_chunks",
+    "encode_chunk_burst",
+    "encode_token_chunk",
+    "logprob_stream_plan",
+    "token_stream_plan",
+]
+
+#: the shipped token stream, declared in schema JSON: one decode step's
+#: tokens as a ``Stream<Bytes 4>`` (a u32 token id per element)
+TOKEN_STREAM_SCHEMA_JSON = {
+    "TokenStream": [["tokens", ["Stream", ["Bytes", 4]]]],
+}
+
+#: per-token logprobs — the second shipped typed stream, proving the
+#: generated codec path: each element is ``Struct{tok, logprob}`` (the
+#: chosen token id + its float32 logprob bit pattern), two u32 words on
+#: the wire, and NO hand-written codec exists for it anywhere.
+LOGPROB_STREAM_SCHEMA_JSON = {
+    "LogprobStream": [["entries", ["Stream", ["Struct", "LogprobEntry"]]]],
+    "LogprobEntry": [["tok", ["Bytes", 4]], ["logprob", ["Bytes", 4]]],
+}
 
 
-def check_chunk_tokens(n: int) -> None:
-    """Single source of the chunk token-count bound (analyzer rule
-    stream-chunk-tokens), shared by both encode paths."""
-    if n >= MAX_CHUNK_TOKENS:
-        raise ValueError(f"chunk of {n} tokens exceeds {MAX_CHUNK_TOKENS}")
+@functools.lru_cache(maxsize=None)
+def token_stream_plan() -> StreamPlan:
+    """The generated plan behind this module's public codec functions.
+
+    ``id_bits`` is the full u32 word (serve packs ``(request:u16 |
+    prompt:u16)``, using both :data:`STREAM_ID_BITS` halves);
+    ``step_bits`` is the u16 step budget the serve plane guarantees.
+    """
+    schema = Schema.from_json(TOKEN_STREAM_SCHEMA_JSON)
+    return stream_plans(
+        schema, id_bits=2 * STREAM_ID_BITS, step_bits=STREAM_ID_BITS
+    )["tokens"]
+
+
+@functools.lru_cache(maxsize=None)
+def logprob_stream_plan() -> StreamPlan:
+    """Generated plan for the shipped logprob stream (same meta budgets)."""
+    schema = Schema.from_json(LOGPROB_STREAM_SCHEMA_JSON)
+    return stream_plans(
+        schema, id_bits=2 * STREAM_ID_BITS, step_bits=STREAM_ID_BITS
+    )["entries"]
 
 
 @dataclass(frozen=True)
 class TokenChunk:
-    """One decode step's tokens for one stream."""
+    """One decode step's tokens for one stream.
+
+    ``corrupt`` is set by the decoder when the fragment's metadata
+    violated the token plan's declared budgets (out-of-budget step,
+    unknown flag bits) — the tokens are kept for diagnostics but the
+    stream must be treated as corrupt.
+    """
 
     stream_id: int
     step: int
     tokens: Tuple[int, ...]
     eos: bool = False
+    corrupt: bool = False
 
 
 def encode_token_chunk(
     stream_id: int, step: int, tokens: Sequence[int], eos: bool = False
 ) -> bytes:
     """Serialize ONE chunk (reference path; bursts use the Pallas kernel)."""
-    n = len(tokens)
-    check_chunk_tokens(n)
-    words = np.empty(CHUNK_META_WORDS + n + 1, np.uint32)
-    words[0] = stream_id
-    words[1] = step
-    words[2] = FLAG_EOS if eos else 0
-    words[CHUNK_META_WORDS : CHUNK_META_WORDS + n] = np.asarray(
-        tokens, np.uint32
-    ) if n else 0
-    words[-1] = n
-    return words.tobytes()
+    return encode_fragment(token_stream_plan(), stream_id, step, tokens, eos)
 
 
 def encode_chunk_burst(chunks: Sequence[TokenChunk]) -> bytes:
@@ -96,30 +158,7 @@ def encode_chunk_burst(chunks: Sequence[TokenChunk]) -> bytes:
     token capacity and batch axes are pow2-bucketed so the jitted kernel is
     reused across ticks with varying live-sequence counts.
     """
-    from ..kernels.ops import encode_chunks_batch
-
-    if not chunks:
-        return b""
-    B = len(chunks)
-    cap = max(max(len(c.tokens) for c in chunks), 1)
-    cap = 1 << (cap - 1).bit_length()
-    Bp = 1 << max(B - 1, 0).bit_length()
-    meta = np.zeros((Bp, CHUNK_META_WORDS), np.uint32)
-    toks = np.zeros((Bp, cap), np.uint32)
-    counts = np.zeros((Bp,), np.int32)
-    for i, c in enumerate(chunks):
-        check_chunk_tokens(len(c.tokens))
-        meta[i] = (c.stream_id, c.step, FLAG_EOS if c.eos else 0)
-        toks[i, : len(c.tokens)] = c.tokens
-        counts[i] = len(c.tokens)
-    rows = np.asarray(encode_chunks_batch(meta, toks, counts))[:B]
-    # trim each row to its live tokens: [meta | tok0..tok_{n-1} | count]
-    parts = []
-    for i in range(B):
-        n = int(counts[i])
-        parts.append(rows[i, : CHUNK_META_WORDS + n].tobytes())
-        parts.append(rows[i, -1:].tobytes())
-    return b"".join(parts)
+    return encode_fragment_burst(token_stream_plan(), chunks)
 
 
 def decode_token_chunks(wire: bytes) -> Tuple[List[TokenChunk], bool]:
@@ -130,32 +169,11 @@ def decode_token_chunks(wire: bytes) -> Tuple[List[TokenChunk], bool]:
     False when the structure does not parse cleanly (truncated wire,
     impossible count) — the parser salvages every chunk it can walk from
     the end so a flagged delivery still attributes corruption to streams.
+    Chunks whose metadata is structurally fine but out of the plan's
+    budgets come back with ``corrupt=True`` instead of poisoning ``ok``.
     """
-    ok = True
-    nbytes = len(wire)
-    if nbytes % 4:
-        ok = False
-        nbytes -= nbytes % 4
-    words = np.frombuffer(wire[:nbytes], np.uint32)
-    out: List[TokenChunk] = []
-    end = len(words)
-    while end > 0:
-        if end < CHUNK_MIN_WORDS:
-            ok = False
-            break
-        n = int(words[end - 1])
-        lo = end - 1 - n - CHUNK_META_WORDS
-        if n >= MAX_CHUNK_TOKENS or lo < 0:
-            ok = False
-            break
-        out.append(
-            TokenChunk(
-                stream_id=int(words[lo]),
-                step=int(words[lo + 1]),
-                tokens=tuple(int(t) for t in words[lo + CHUNK_META_WORDS : end - 1]),
-                eos=bool(int(words[lo + 2]) & FLAG_EOS),
-            )
-        )
-        end = lo
-    out.reverse()
-    return out, ok
+    frags, ok = decode_fragments(token_stream_plan(), wire)
+    return [
+        TokenChunk(f.stream_id, f.step, f.tokens, f.eos, f.corrupt)
+        for f in frags
+    ], ok

@@ -34,6 +34,12 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from ..core.stream_plans import (
+    Fragment,
+    StreamPlan,
+    decode_fragments,
+    encode_fragment_burst,
+)
 from ..obs.metrics import window_stats
 from .chunks import TokenChunk, decode_token_chunks, encode_chunk_burst
 
@@ -73,13 +79,22 @@ class StreamWriter:
         self.step = 0
         self.closed = False
 
-    def write(self, tokens: Sequence[int], eos: bool = False) -> None:
-        """Queue one decode step's tokens; sent at the lane's next flush."""
+    def write(self, tokens: Sequence, eos: bool = False) -> None:
+        """Queue one decode step's elements; sent at the lane's next flush.
+
+        Elements follow the lane's generated plan: plain ints for the
+        default token lane (and any single-leaf plan), tuples of ints in
+        leaf order for multi-leaf element types.
+        """
         if self.closed:
             raise RuntimeError(f"stream {self.stream_id} already closed")
-        self.lane._pending.append(
-            TokenChunk(self.stream_id, self.step, tuple(int(t) for t in tokens), eos)
-        )
+        plan = self.lane.plan
+        if plan is None or plan.n_leaves == 1:
+            elems = tuple(int(t) for t in tokens)
+        else:
+            elems = tuple(tuple(int(v) for v in e) for e in tokens)
+        cls = TokenChunk if plan is None else Fragment
+        self.lane._pending.append(cls(self.stream_id, self.step, elems, eos))
         self.step += 1
         self.closed = eos
 
@@ -114,10 +129,14 @@ class ChunkLane:
     def __init__(self, mailbox, dst: int, list_level: int = 1,
                  p95_threshold: Optional[float] = None,
                  clamp_chunks: int = 1, max_hold: int = 3,
-                 metrics=None):
+                 metrics=None, plan: Optional[StreamPlan] = None):
         self.mailbox = mailbox
         self.dst = dst
         self.list_level = list_level
+        #: generated ``core.stream_plans.StreamPlan`` this lane serializes
+        #: with; None = the shipped token plan (``chunks.py`` codec).  Any
+        #: ``Stream<T>`` declared in schema JSON rides the lane unchanged.
+        self.plan = plan
         self.p95_threshold = p95_threshold
         self.clamp_chunks = clamp_chunks
         self.max_hold = max_hold
@@ -195,9 +214,11 @@ class ChunkLane:
         else:
             chunks, self._pending = self._pending, []
         self._held = 0
-        self.mailbox.send(
-            self.dst, encode_chunk_burst(chunks), list_level=self.list_level
-        )
+        if self.plan is None:
+            wire = encode_chunk_burst(chunks)
+        else:
+            wire = encode_fragment_burst(self.plan, chunks)
+        self.mailbox.send(self.dst, wire, list_level=self.list_level)
         self.flushes += 1
         if self.spans is not None:
             for c in chunks:
@@ -259,13 +280,16 @@ class StreamReader:
     """
 
     def __init__(self, metrics=None, spans=None,
-                 on_corrupt: str = "flag") -> None:
+                 on_corrupt: str = "flag",
+                 plan: Optional[StreamPlan] = None) -> None:
         if on_corrupt not in ("flag", "raise", "retry"):
             raise ValueError(
                 f"on_corrupt must be 'flag', 'raise' or 'retry', got "
                 f"{on_corrupt!r}"
             )
         self.on_corrupt = on_corrupt
+        #: generated plan bursts are parsed with; None = the token plan
+        self.plan = plan
         self.streams: Dict[Tuple[int, int], StreamState] = {}
         #: deliveries whose bursts yielded no parseable chunk at all —
         #: corruption that cannot be attributed to a stream
@@ -283,7 +307,10 @@ class StreamReader:
         events: List[StreamEvent] = []
         m = self.metrics
         for d in deliveries:
-            chunks, parsed = decode_token_chunks(d.wire)
+            if self.plan is None:
+                chunks, parsed = decode_token_chunks(d.wire)
+            else:
+                chunks, parsed = decode_fragments(self.plan, d.wire)
             clean = bool(d.ok) and parsed
             if not clean and self.on_corrupt == "raise":
                 raise RuntimeError(
@@ -319,6 +346,12 @@ class StreamReader:
                 if not clean:
                     st.ok = False  # CRC/parse failure poisons this stream
                     reasons.append("crc")
+                if c.corrupt:
+                    # fragment meta violated the plan's declared budgets
+                    # (out-of-budget id/step, unknown flags): flag the
+                    # stream instead of trusting garbage metadata
+                    st.ok = False
+                    reasons.append("meta-budget")
                 if c.step != st.next_step or st.eos:
                     st.ok = False  # lost, duplicated, or post-EOS chunk
                     reasons.append("chunk-gap")

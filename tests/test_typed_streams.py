@@ -1,0 +1,372 @@
+"""Typed streams: ``Stream<T>`` IDL nodes and the codecs generated from
+them (``core/stream_plans.py``).
+
+Covers the PR's regression gates: the generated ``TokenChunk`` codec is
+byte-identical to the frozen golden fixture of the hand-rolled wire
+format (``tests/golden/token_chunks.bin``), random stream schemas
+round-trip through encode -> burst concat -> back-to-front decode, the
+out-of-budget-metadata corruption flag surfaces on decode instead of
+silently attributing tokens to a garbage stream, and the shipped logprob
+stream — declared purely in schema JSON — rides ``ChunkLane`` /
+``StreamReader`` over the fabric with no hand-written codec.
+
+Runs on the 8 simulated host devices from ``conftest.py`` (the CI
+multi-device job re-runs this file explicitly).
+"""
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import Schema, SchemaError
+from repro.core.stream_plans import (
+    CHUNK_META_WORDS,
+    FLAG_EOS,
+    Fragment,
+    StreamPlan,
+    decode_fragments,
+    encode_fragment,
+    encode_fragment_burst,
+    stream_plans,
+)
+from repro.stream import (
+    LOGPROB_STREAM_SCHEMA_JSON,
+    TOKEN_STREAM_SCHEMA_JSON,
+    TokenChunk,
+    decode_token_chunks,
+    encode_chunk_burst,
+    encode_token_chunk,
+    logprob_stream_plan,
+    token_stream_plan,
+)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "token_chunks.bin"
+
+
+# ---------------------------------------------------------------------------
+# golden fixture: generated codec == frozen hand-rolled wire format
+# ---------------------------------------------------------------------------
+
+
+def _golden_chunks():
+    """The deterministic chunk mix the fixture was frozen from (generated
+    by the PRE-refactor hand-rolled codec; see tests/golden/)."""
+    rng = np.random.default_rng(1801)
+    specs = [
+        (0x0001_0000, 1, False),  # serve-style (request 1, prompt 0)
+        (0xFFFF_FFFF, 0, False),  # full-u32 stream id
+        (7, 0, True),             # empty EOS terminator
+        (0x0002_0003, 13, False),
+        (42, 16, True),
+        (0x1234_5678, 250, False),
+    ]
+    chunks, step_per_sid = [], {}
+    for sid, n, eos in specs:
+        step = step_per_sid.get(sid, 0)
+        toks = tuple(
+            int(t) for t in rng.integers(0, 1 << 32, n, dtype=np.uint64)
+        )
+        chunks.append(TokenChunk(sid, step, toks, eos))
+        step_per_sid[sid] = step + 1
+    return chunks
+
+
+def test_generated_token_codec_matches_golden_fixture():
+    """The ``Stream<Bytes 4>``-generated codec emits byte-for-byte the
+    frozen hand-rolled wire: the batched Pallas burst, the single-chunk
+    host path, and the decode round-trip all pin to the fixture."""
+    golden = GOLDEN.read_bytes()
+    chunks = _golden_chunks()
+    assert encode_chunk_burst(chunks) == golden
+    singles = b"".join(
+        encode_token_chunk(c.stream_id, c.step, c.tokens, c.eos)
+        for c in chunks
+    )
+    assert singles == golden
+    got, ok = decode_token_chunks(golden)
+    assert ok and got == chunks
+    assert not any(c.corrupt for c in got)
+
+
+def test_token_plan_is_generated_from_schema_rom():
+    """``chunks.py`` ships no wire layout of its own: both plans compile
+    from their schema JSON through the same schema ROM."""
+    plans = stream_plans(Schema.from_json(TOKEN_STREAM_SCHEMA_JSON))
+    assert set(plans) == {"tokens"}
+    tok = plans["tokens"]
+    assert tok.n_leaves == 1 and tok.elem_words == 1
+    assert tok.leaf_nbytes == (4,)
+    assert token_stream_plan() == dataclasses.replace(
+        tok, id_bits=32, step_bits=16
+    )
+    lp = stream_plans(Schema.from_json(LOGPROB_STREAM_SCHEMA_JSON))["entries"]
+    assert lp.n_leaves == 2 and lp.elem_words == 2
+    assert lp.leaf_paths == ("entries.elem.tok", "entries.elem.logprob")
+    assert logprob_stream_plan().leaf_nbytes == (4, 4)
+
+
+def test_stream_element_must_be_fixed_size():
+    bad = Schema.from_json({"M": [["s", ["Stream", ["List", ["Bytes", 2]]]]]})
+    with pytest.raises(SchemaError, match="must be fixed-size"):
+        stream_plans(bad)
+
+
+# ---------------------------------------------------------------------------
+# property: random stream schemas round-trip through the generated codec
+# ---------------------------------------------------------------------------
+
+
+def _random_plan(rng) -> StreamPlan:
+    """A plan compiled from a random schema: 1..4 leaves of 1..12 bytes
+    (single-leaf plans use a bare ``Stream<Bytes n>``, exercising both
+    schema shapes and 1..3-word leaves)."""
+    n_leaves = int(rng.integers(1, 5))
+    nbytes = [int(rng.integers(1, 13)) for _ in range(n_leaves)]
+    if n_leaves == 1:
+        sj = {"M": [["s", ["Stream", ["Bytes", nbytes[0]]]]]}
+    else:
+        sj = {
+            "M": [["s", ["Stream", ["Struct", "E"]]]],
+            "E": [[f"f{i}", ["Bytes", nb]] for i, nb in enumerate(nbytes)],
+        }
+    return stream_plans(Schema.from_json(sj))["s"]
+
+
+def _random_fragments(rng, plan: StreamPlan):
+    frags = []
+    for _ in range(int(rng.integers(1, 6))):
+        n = int(rng.integers(0, 7))
+        elems = []
+        for _ in range(n):
+            leaves = [
+                int(rng.integers(0, 1 << min(8 * nb, 63)))
+                for nb in plan.leaf_nbytes
+            ]
+            elems.append(leaves[0] if plan.n_leaves == 1 else tuple(leaves))
+        frags.append(Fragment(
+            stream_id=int(rng.integers(0, 1 << 32)),
+            step=int(rng.integers(0, 1 << 16)),
+            tokens=tuple(elems),
+            eos=bool(rng.integers(0, 2)),
+        ))
+    return frags
+
+
+def test_typed_stream_roundtrip_property():
+    """Seeded property (always runs): for random stream schemas and
+    random element sequences, generated encode -> burst concat ->
+    back-to-front decode is identity, and the batched Pallas burst is
+    bit-identical to concatenated single-fragment encodes."""
+    rng = np.random.default_rng(0x46B)
+    for _ in range(25):
+        plan = _random_plan(rng)
+        frags = _random_fragments(rng, plan)
+        burst = encode_fragment_burst(plan, frags)
+        singles = b"".join(
+            encode_fragment(plan, f.stream_id, f.step, f.tokens, f.eos)
+            for f in frags
+        )
+        assert burst == singles
+        got, ok = decode_fragments(plan, burst)
+        assert ok and got == frags
+        assert not any(f.corrupt for f in got)
+
+
+def test_typed_stream_roundtrip_hypothesis():
+    """The same identity under hypothesis when the container has it
+    (mirrors the seeded test above, which always runs)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def scenario(draw):
+        nbytes = draw(st.lists(st.integers(1, 12), min_size=1, max_size=4))
+        n_frags = draw(st.integers(1, 4))
+        frags = []
+        for i in range(n_frags):
+            n = draw(st.integers(0, 5))
+            elems = []
+            for _ in range(n):
+                leaves = [
+                    draw(st.integers(0, (1 << (8 * nb)) - 1))
+                    for nb in nbytes
+                ]
+                elems.append(leaves[0] if len(nbytes) == 1 else tuple(leaves))
+            frags.append(Fragment(
+                stream_id=draw(st.integers(0, (1 << 32) - 1)),
+                step=draw(st.integers(0, (1 << 16) - 1)),
+                tokens=tuple(elems),
+                eos=draw(st.booleans()),
+            ))
+        return nbytes, frags
+
+    @settings(max_examples=30, deadline=None)
+    @given(scenario())
+    def check(sc):
+        nbytes, frags = sc
+        if len(nbytes) == 1:
+            sj = {"M": [["s", ["Stream", ["Bytes", nbytes[0]]]]]}
+        else:
+            sj = {
+                "M": [["s", ["Stream", ["Struct", "E"]]]],
+                "E": [[f"f{i}", ["Bytes", nb]]
+                      for i, nb in enumerate(nbytes)],
+            }
+        plan = stream_plans(Schema.from_json(sj))["s"]
+        burst = encode_fragment_burst(plan, frags)
+        got, ok = decode_fragments(plan, burst)
+        assert ok and got == frags
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# out-of-budget metadata: per-fragment corruption flag (the PR's bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_flags_out_of_budget_meta_per_fragment():
+    """A fragment whose metadata violates the plan's declared budgets
+    parses structurally but comes back ``corrupt=True`` — it is never
+    silently attributed to a garbage stream, and its neighbors in the
+    same burst stay clean."""
+    narrow = dataclasses.replace(token_stream_plan(), step_bits=8)
+    wide = token_stream_plan()  # step_bits=16: encodes what narrow rejects
+    good = encode_fragment(narrow, 5, 3, (10, 11))
+    bad = encode_fragment(wide, 6, 300, (12,))  # step over narrow's budget
+    got, ok = decode_fragments(narrow, good + bad)
+    assert ok  # structurally fine: corruption is per-fragment, not burst
+    assert [f.corrupt for f in got] == [False, True]
+    assert got[1].tokens == (12,)  # payload kept for diagnostics
+    # the encoder refuses to EMIT what decode flags
+    with pytest.raises(ValueError, match="outside the 8-bit budget"):
+        encode_fragment(narrow, 6, 300, (12,))
+    with pytest.raises(ValueError, match="outside the 8-bit budget"):
+        encode_fragment_burst(narrow, [Fragment(6, 300, (12,))])
+
+
+def test_decode_flags_unknown_flag_bits():
+    """Unknown ``flags`` bits mark corruption too (a future wire revision
+    must not be silently misread as EOS-or-not)."""
+    plan = token_stream_plan()
+    words = np.frombuffer(
+        encode_fragment(plan, 1, 0, (7,)), dtype="<u4"
+    ).copy()
+    words[2] = FLAG_EOS | 0x8  # an undefined flag bit
+    got, ok = decode_fragments(plan, words.tobytes())
+    assert ok and len(got) == 1
+    assert got[0].corrupt and got[0].eos  # known bits still decode
+
+
+def test_reader_surfaces_meta_budget_corruption():
+    """``StreamReader`` poisons exactly the stream that carried the
+    out-of-budget fragment, with the ``meta-budget`` reason — CRC-clean
+    deliveries included."""
+    from repro.fabric import Delivery
+    from repro.obs import SpanTracker
+    from repro.stream import StreamReader
+
+    plan = dataclasses.replace(token_stream_plan(), step_bits=8)
+    wide = token_stream_plan()
+    spans = SpanTracker()
+    reader = StreamReader(spans=spans, plan=plan)
+    rid = spans.start("request", req=0)
+    reader.span_ids[(1, 9)] = rid
+    clean = encode_fragment(plan, 4, 0, (1, 2), eos=True)
+    poisoned = encode_fragment(wide, 9, 400, (3,))
+    evs = reader.feed([Delivery(1, clean + poisoned)])
+    assert [ev.ok for ev in evs] == [True, False]
+    assert reader.streams[(1, 4)].ok and reader.streams[(1, 4)].eos
+    assert not reader.streams[(1, 9)].ok
+    span = spans.get(rid)
+    assert span.degraded and "meta-budget" in span.reasons
+
+
+# ---------------------------------------------------------------------------
+# second typed stream: schema JSON -> fabric -> reader, no new codec code
+# ---------------------------------------------------------------------------
+
+
+def test_logprob_stream_over_fabric_schema_only():
+    """The logprob stream exists only as schema JSON: its plan compiles
+    through the ROM and rides the unchanged ``ChunkLane``/``StreamReader``
+    over the fabric, (tok, float32-bits) tuples intact."""
+    from repro.fabric import Fabric, FabricConfig
+    from repro.stream import ChunkLane, StreamReader
+
+    fab = Fabric(n_ranks=8, config=FabricConfig(frame_phits=1, credits=2))
+    plan = logprob_stream_plan()
+    lane = ChunkLane(fab.mailbox(3), 0, list_level=2, plan=plan)
+    writers = {sid: lane.writer(sid) for sid in (10, 11)}
+    rng = np.random.default_rng(7)
+    sent = {sid: [] for sid in writers}
+    for step in range(4):
+        for sid, w in writers.items():
+            entries = [
+                (int(rng.integers(0, 1 << 31)),
+                 int(np.float32(-rng.random()).view(np.uint32)))
+                for _ in range(2)
+            ]
+            sent[sid].extend(entries)
+            w.write(entries, eos=(step == 3))
+        lane.flush()
+        fab.exchange()
+    reader = StreamReader(plan=plan)
+    for ev in reader.feed(fab.mailbox(0).recv()):
+        assert ev.ok
+    assert reader.all_eos(((3, 10), (3, 11)))
+    for sid, entries in sent.items():
+        st = reader.streams[(3, sid)]
+        assert st.ok and st.tokens == entries
+        for _, bits in st.tokens:  # bit patterns survive exactly
+            assert float(np.uint32(bits).view(np.float32)) <= 0.0
+
+
+# ---------------------------------------------------------------------------
+# serve plane: logprobs attach without touching the token stream
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.launch.serve import encode_request
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(smoke_config(get_config("yi-6b")), n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    wires = [
+        encode_request(r, [
+            list(map(int, rng.integers(2, cfg.vocab, 10)))
+            for _ in range(int(rng.integers(1, 3)))
+        ])
+        for r in range(3)
+    ]
+    return params, cfg, wires
+
+
+def test_serve_logprobs_leave_tokens_byte_identical(serve_setup):
+    """Attaching the logprob side stream changes NOTHING about the token
+    plane: final wires stay byte-identical, and every logprob event's
+    token cross-validates against the token stream."""
+    from repro.launch.serve import serve_requests_streaming
+
+    params, cfg, wires = serve_setup
+    kw = dict(max_new=4, pad_to=8, slots=4, n_shards=2)
+    toks, lps = {}, {}
+    base = serve_requests_streaming(params, cfg, wires, **kw)
+    with_lp = serve_requests_streaming(
+        params, cfg, wires, logprobs=True,
+        on_token=lambda m, j, s, t: toks.setdefault((m, j), []).append(t),
+        on_logprob=lambda m, j, s, t, lp: lps.setdefault(
+            (m, j), []).append((t, lp)),
+        **kw)
+    assert with_lp == base  # byte-identical response wires
+    assert set(lps) == set(toks)
+    for key, pairs in lps.items():
+        assert [t for t, _ in pairs] == toks[key]
+        assert all(np.isfinite(lp) and lp <= 0.0 for _, lp in pairs)
